@@ -1,0 +1,76 @@
+"""Paper §5 (Figures 1–3): factorized vs direct all-to-all over message
+sizes.
+
+Protocol mirrors the paper: element counts in deciles 1..10000 of int32
+("MPI_INT") per process pair, 8 warmup + 40 measured repetitions,
+best-of (completion time of the slowest process ~ host wall time here),
+barrier via ``block_until_ready``.  p = 16 virtual CPU devices;
+factorizations d=1 (direct), 2, 3, 4 = ceil(log2 p) from dims_create.
+
+This is the CPU-backend *measured* analogue; the TPU-regime predictions
+come from the tuning model and the roofline artifacts.  Run via:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=16 \
+      PYTHONPATH=src python -m benchmarks.alltoall_cmp
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dims_create, host_alltoall
+from repro.core.cache import cart_create
+
+P_PROCS = 16
+ELEMENTS = (1, 10, 100, 1000, 10000)
+WARMUP, REPS = 8, 40
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def bench(fn, x):
+    for _ in range(WARMUP):
+        jax.block_until_ready(fn(x))
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    if jax.device_count() < P_PROCS:
+        print(f"need {P_PROCS} devices (run via benchmarks.run)",
+              file=sys.stderr)
+        return 1
+    rows = []
+    variants = [("direct", (P_PROCS,))]
+    for d in (2, 3, 4):
+        variants.append((f"factorized[d={d}]", dims_create(P_PROCS, d)))
+
+    for impl, dims in variants:
+        names = tuple(f"t{i}" for i in range(len(dims)))
+        mesh = cart_create(P_PROCS, tuple(reversed(dims)), names)
+        backend = "direct" if impl == "direct" else "factorized"
+        fn = host_alltoall(mesh, names, backend=backend)
+        for nelem in ELEMENTS:
+            x = jnp.ones((P_PROCS, P_PROCS, nelem), jnp.int32)
+            sec = bench(fn, x)
+            rows.append({"impl": impl, "dims": list(dims),
+                         "block_elems": nelem, "seconds": sec})
+            print(f"alltoall_cmp,{impl},{nelem},{sec * 1e6:.1f}")
+
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "alltoall_cmp.json").write_text(json.dumps(rows, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Dissect one dry-run cell: top computations by loop-weighted bytes and
+flops, plus collective breakdown by kind and mesh-axis stride.
+
+The perf-iteration microscope:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+  PYTHONPATH=src python -m benchmarks.dissect --arch xlstm-1.3b \
+      --shape train_4k --mesh single [--set xlstm_chunk=64]
+
+NOTE: import repro.launch.dryrun FIRST (it pins the 512-device flag).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.launch import dryrun as dr
+from repro.core.hlo_inspect import (_comp_bytes, _comp_dot_flops,
+                                    _inlined_computations, _multipliers,
+                                    _parse_computations,
+                                    collective_bytes_by_stride,
+                                    loop_aware_analysis)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", action="append", dest="overrides")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg, model, lowered = dr.build_lowered(args.arch, args.shape,
+                                           args.mesh,
+                                           overrides=args.overrides)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    la = loop_aware_analysis(text)
+    print(f"== {args.arch} x {args.shape} x {args.mesh} "
+          f"overrides={args.overrides}")
+    print(f"flops/dev {la['flops']:.4g}  bytes/dev {la['bytes_proxy']:.4g}"
+          f"  coll/dev {la['collective_bytes']:.4g}")
+    print(f"terms(s): comp {la['flops'] / 197e12:.2f} "
+          f"mem {la['bytes_proxy'] / 819e9:.2f} "
+          f"coll {la['collective_bytes'] / 50e9:.2f}")
+    print("memory_analysis:", dr._mem_dict(compiled.memory_analysis()))
+
+    comps = _parse_computations(text)
+    mult = _multipliers(comps)
+    inlined = _inlined_computations(comps)
+    rows = []
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        b = _comp_bytes(comp, comps) if name not in inlined else 0.0
+        f = _comp_dot_flops(comp)
+        rows.append((m * b, m * f, m, name, len(comp.ops)))
+    print(f"\ntop {args.top} computations by loop-weighted bytes:")
+    for wb, wf, m, name, nops in sorted(rows, reverse=True)[:args.top]:
+        print(f"  {wb:12.4g} B  {wf:12.4g} F  x{m:<10.0f} {name} "
+              f"({nops} ops)")
+
+    print("\ncollectives by (kind, member-stride):")
+    for (k, s), v in sorted(collective_bytes_by_stride(text).items(),
+                            key=lambda kv: -kv[1]):
+        print(f"  {k:22s} stride={s:<6d} {v:12.4g} B")
+
+
+if __name__ == "__main__":
+    main()

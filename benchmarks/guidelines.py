@@ -1,0 +1,38 @@
+"""Self-consistent performance-guideline verification (paper viewpoint 3).
+
+Reads the alltoall_cmp measurements and reports every block size where
+the native (direct) collective loses to its own factorized composition —
+the class of defect the paper exposes in OpenMPI 4.1.6 (Fig. 2).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import Measurement, check_guidelines, format_report
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def main():
+    src = ARTIFACTS / "alltoall_cmp.json"
+    if not src.exists():
+        print("guidelines,skipped,no alltoall_cmp.json "
+              "(run benchmarks.alltoall_cmp first)")
+        return 0
+    rows = json.loads(src.read_text())
+    ms = [Measurement(r["impl"], r["block_elems"], r["seconds"])
+          for r in rows]
+    violations = check_guidelines(ms, tolerance=1.10)
+    print(format_report(violations))
+    for v in violations:
+        print(f"guidelines,violation,{v.block_elems},"
+              f"{v.factor:.2f}x,{v.best_composed_impl}")
+    if not violations:
+        print("guidelines,clean,0")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

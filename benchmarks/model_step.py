@@ -1,0 +1,63 @@
+"""Per-architecture smoke-config step timings (single device, measured).
+
+One row per arch for train-step and decode-step — the measured-substrate
+complement to the derived full-scale roofline table.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import build_model, make_serve_step, make_train_step
+from repro.optim import AdamW, AdamWConfig
+
+REPS, WARMUP = 10, 3
+
+
+def _bench(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        params = model.init(key)
+        opt = AdamW(AdamWConfig(lr=1e-3))
+        B, S = 2, 32
+        toks = jnp.zeros((B, S), jnp.int32)
+        batch = {"tokens": toks, "labels": toks,
+                 "mask": jnp.ones((B, S), jnp.float32)}
+        if cfg.frontend is not None or cfg.encoder_layers:
+            batch["frontend_embeds"] = jnp.zeros(
+                (B, cfg.n_frontend_tokens, cfg.d_model))
+        step = jax.jit(make_train_step(model, opt))
+        sec = _bench(step, params, opt.init(params), batch)
+        print(f"model_step.train,{arch},{sec * 1e6:.0f},smoke B=2 S=32")
+
+        serve = jax.jit(make_serve_step(model))
+        caches = model.init_caches(B, 64)
+        if cfg.encoder_layers:
+            mem = model.encode(params, batch["frontend_embeds"])
+            sec = _bench(serve, params, caches, toks[:, :1], mem)
+        else:
+            sec = _bench(serve, params, caches, toks[:, :1])
+        print(f"model_step.decode,{arch},{sec * 1e6:.0f},smoke B=2")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

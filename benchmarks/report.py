@@ -1,0 +1,94 @@
+"""Generate the EXPERIMENTS.md tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir dryrun] [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.roofline import (DCN_BW, HBM_BW, LINK_BW, PEAK_FLOPS,
+                                 analyze, suggestion)
+
+BASE = Path(__file__).resolve().parent / "artifacts"
+
+
+def load(dirname: str):
+    recs = []
+    for f in sorted((BASE / dirname).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if not rec.get("tag"):
+            recs.append(rec)
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    print(f"\n### Dry-run cells ({mesh} mesh)\n")
+    print("| arch | shape | status | compile (s) | args GB/dev | "
+          "temp GB/dev | HLO GFLOP/dev | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            print(f"| {r['arch']} | {r['shape']} | {r['status']}: "
+                  f"{reason} | | | | | |")
+            continue
+        mem = r["memory_analysis"]
+        print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.0f} | "
+              f"{mem.get('argument_size_in_bytes', 0) / 1e9:.2f} | "
+              f"{mem.get('temp_size_in_bytes', 0) / 1e9:.2f} | "
+              f"{r['flops_per_device'] / 1e9:.0f} | "
+              f"{r['collective_bytes_per_device'] / 1e9:.1f} |")
+
+
+def roofline_table(recs, mesh):
+    print(f"\n### Roofline ({mesh} mesh; {PEAK_FLOPS/1e12:.0f} TF bf16, "
+          f"{HBM_BW/1e9:.0f} GB/s HBM, {LINK_BW/1e9:.0f} GB/s ICI"
+          + (f", {DCN_BW/1e9:.1f} GB/s DCN" if mesh == "multi" else "")
+          + ")\n")
+    print("| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) "
+          "| T_ici | T_dcn | dominant | 6ND/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        a = analyze(r)
+        print(f"| {a['arch']} | {a['shape']} | {a['t_compute']:.3f} | "
+              f"{a['t_memory']:.2f} | {a['t_collective']:.2f} | "
+              f"{a['t_ici']:.2f} | {a['t_dcn']:.2f} | {a['dominant']} | "
+              f"{a['useful_ratio']:.2f} | "
+              f"{100 * a['roofline_fraction']:.1f}% |")
+
+
+def bottleneck_notes(recs, mesh):
+    print(f"\n### Per-cell bottleneck notes ({mesh})\n")
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        a = analyze(r)
+        print(f"- **{a['arch']} × {a['shape']}**: {a['dominant']}-bound "
+              f"— {suggestion(a)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--notes", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    for m in meshes:
+        dryrun_table(recs, m)
+        roofline_table(recs, m)
+        if args.notes:
+            bottleneck_notes(recs, m)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Continuous-batching serving demo: 8 requests of mixed lengths through
+3 slots — finished requests are replaced without stalling the batch.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+
+import jax
+
+from repro.models import ModelConfig, build_model
+from repro.runtime.serving import ContinuousBatcher, Request
+
+
+def main():
+    cfg = ModelConfig(name="demo", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                      param_dtype="float32", compute_dtype="float32",
+                      remat=False)
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    b = ContinuousBatcher(model, params, max_batch=3, max_seq=64)
+    prompts = [[1, 2, 3], [10, 11], [5, 6, 7, 8], [20], [30, 31, 32],
+               [40, 41], [50], [60, 61, 62]]
+    gens = [6, 4, 5, 8, 3, 7, 4, 5]
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        b.submit(Request(i, p, g))
+    done = b.run()
+
+    seq_ticks = sum(len(p) + g - 1 for p, g in zip(prompts, gens))
+    print(f"served {len(done)} requests in {b.ticks} ticks "
+          f"(sequential would be {seq_ticks}; "
+          f"{seq_ticks / b.ticks:.1f}x overlap)")
+    for rid in sorted(done):
+        print(f"  req {rid}: prompt={prompts[rid]} -> {done[rid]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpointing: sharded, async, resharding-on-restore."""
+
+from .store import (CheckpointManager, latest_step, restore_checkpoint,
+                    save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,38 @@
+"""Architecture registry: the 10 assigned configs + shape cells."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+from .shapes import SHAPES, ShapeCell, applicable, input_specs
+
+_MODULES = {
+    "grok-1-314b": "grok_1_314b",
+    "phi3.5-moe-42b": "phi35_moe_42b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "internvl2-2b": "internvl2_2b",
+    "internlm2-20b": "internlm2_20b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "deepseek-7b": "deepseek_7b",
+    "qwen2.5-3b": "qwen25_3b",
+    "whisper-tiny": "whisper_tiny",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def list_configs() -> dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+__all__ = ["ARCH_NAMES", "SHAPES", "ShapeCell", "applicable", "get_config",
+           "input_specs", "list_configs"]

@@ -1,0 +1,84 @@
+"""Input-shape cells and per-arch applicability.
+
+Four shapes per LM arch (40 cells total):
+  train_4k    seq=4096   global_batch=256   (training:  train_step)
+  prefill_32k seq=32768  global_batch=32    (inference: prefill last-logit)
+  decode_32k  seq=32768  global_batch=128   (serve_step, KV cache = seq)
+  long_500k   seq=524288 global_batch=1     (serve_step, sub-quadratic only)
+
+``long_500k`` runs only for architectures whose decode state is
+sub-quadratic in context: SSM/hybrid state (jamba, xlstm) or sliding-
+window KV (h2o-danube).  Pure full-attention archs skip it (a 512k dense
+KV cache is the architecture's own limitation, recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs with sub-quadratic long-context decode
+_SUBQUADRATIC = {"jamba-v0.1-52b", "xlstm-1.3b", "h2o-danube-1.8b"}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape.name == "long_500k" and cfg.name not in _SUBQUADRATIC:
+        return False, ("full-attention KV cache at 524288 tokens is "
+                       "quadratic-state; skipped per assignment rules")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, *, reduced: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``reduced`` scales batch/seq down for smoke testing the same code path.
+    """
+    S = shape.seq_len if not reduced else 32
+    B = shape.global_batch if not reduced else 4
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(B, S), "labels": tok(B, S),
+                 "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        if cfg.frontend is not None or cfg.encoder_layers:
+            nf = cfg.n_frontend_tokens if not reduced else 8
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, nf, cfg.d_model), jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        out = {"tokens": tok(B, S)}
+        if cfg.frontend is not None or cfg.encoder_layers:
+            nf = cfg.n_frontend_tokens if not reduced else 8
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, nf, cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "decode":
+        # one new token; the cache covers `seq_len` context
+        out = {"tokens_t": tok(B, 1), "cache_len": S, "batch": B}
+        return out
+    raise ValueError(shape.kind)

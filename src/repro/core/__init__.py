@@ -1,0 +1,52 @@
+"""Core contribution: factorized zero-copy all-to-all for d-dim tori.
+
+JAX reproduction of Träff, "Effective MPI: User-defined Datatypes and
+Cartesian Communicators for Zero-copy All-to-all Communication in
+Multidimensional Tori" (CS.DC 2026).
+"""
+
+from .dims import dims_create, max_dims, prime_factorization
+from .factorized import (
+    direct_all_to_all,
+    direct_all_to_all_tiled,
+    factorized_all_to_all,
+    factorized_all_to_all_tiled,
+    host_alltoall,
+)
+from .cache import (
+    TorusFactorization,
+    cache_stats,
+    cart_create,
+    free,
+    get_factorization,
+)
+from .simulator import (
+    PAPER_EXAMPLES,
+    example_index_table,
+    round_datatype,
+    simulate_direct_alltoall,
+    simulate_factorized_alltoall,
+)
+from .tuning import (
+    DCN,
+    ICI,
+    LinkModel,
+    Schedule,
+    choose_algorithm,
+    crossover_block_bytes,
+)
+from .guidelines import Measurement, Violation, check_guidelines, format_report
+from .hlo_inspect import collective_bytes_of, parse_hlo
+from .pipelined import choose_chunks, pipelined_all_to_all
+
+__all__ = [
+    "DCN", "ICI", "LinkModel", "Measurement", "PAPER_EXAMPLES", "Schedule",
+    "TorusFactorization", "Violation", "cache_stats", "cart_create",
+    "check_guidelines", "choose_algorithm", "choose_chunks",
+    "collective_bytes_of", "crossover_block_bytes", "dims_create",
+    "direct_all_to_all", "direct_all_to_all_tiled", "example_index_table",
+    "factorized_all_to_all", "factorized_all_to_all_tiled", "format_report",
+    "free", "get_factorization", "host_alltoall", "max_dims", "parse_hlo",
+    "pipelined_all_to_all", "prime_factorization", "round_datatype",
+    "simulate_direct_alltoall", "simulate_factorized_alltoall",
+]

@@ -1,0 +1,138 @@
+"""Communicator factorization and caching — the JAX analogue of Listings 1–2.
+
+The paper amortizes the expensive ``MPI_Cart_create`` + d ``MPI_Comm_split``
+calls by caching the per-dimension subcommunicators on the communicator via
+attribute caching (a hidden keyval, Listing 2).  In JAX the analogue is:
+
+* ``cart_create(mesh_or_devices, dims, names)`` — build a Cartesian mesh
+  over the same devices (the Cartesian communicator).  Splitting an
+  existing mesh axis into virtual sub-axes gives the dimension-wise
+  "communicators" for free: a ``shard_map`` collective over one named axis
+  *is* the concurrent per-group collective.
+* ``TorusFactorization`` — the cached descriptor: dims, strides, round
+  schedule, chosen variant.  Descriptors are cached in a registry keyed by
+  (device fingerprint, dims, names) so repeated all-to-all calls never
+  recompute the factorization or rebuild the mesh (mesh construction and
+  jit tracing play the role of the paper's datatype/communicator setup
+  cost, paid once).
+* ``free()`` — the analogue of the delete callback (Listing 2's
+  ``torusdel``), evicting the cache entry.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from .dims import dims_create
+from .simulator import strides
+
+
+@dataclass(frozen=True)
+class TorusFactorization:
+    """Cached factorization descriptor (the paper's ``torusattr``)."""
+
+    axis_names: tuple[str, ...]          # fastest digit first
+    dims: tuple[int, ...]
+    variant: str = "natural"
+    round_order: tuple[int, ...] | None = None
+
+    @property
+    def d(self) -> int:
+        return len(self.dims)
+
+    @property
+    def p(self) -> int:
+        return math.prod(self.dims)
+
+    @property
+    def sigma(self) -> tuple[int, ...]:
+        return strides(self.dims)
+
+    def blocks_sent_per_device(self) -> int:
+        """Theorem 1: dp - sum_k p/D[k]."""
+        return self.d * self.p - sum(self.p // Dk for Dk in self.dims)
+
+    def mesh_axes_reversed(self) -> tuple[str, ...]:
+        """Most-significant-first tuple (JAX collective linearization)."""
+        return tuple(reversed(self.axis_names))
+
+
+def cart_create(devices, dims: tuple[int, ...],
+                names: tuple[str, ...] | None = None) -> Mesh:
+    """``MPI_Cart_create``: a Cartesian mesh over the given devices.
+
+    ``devices`` may be a flat device list, an existing ``Mesh`` (its devices
+    are reused in order — the no-reorder case of Listing 1), or an int
+    (take the first n local devices).  ``dims`` follows the digit
+    convention of this package: ``dims[0]`` is the fastest digit, so the
+    device array is built with ``dims`` reversed (row-major, most
+    significant first).
+    """
+    if isinstance(devices, Mesh):
+        devs = list(devices.devices.flat)
+    elif isinstance(devices, int):
+        devs = jax.devices()[:devices]
+    else:
+        devs = list(devices)
+    p = math.prod(dims)
+    if len(devs) != p:
+        raise ValueError(f"{len(devs)} devices != prod(dims) = {p}")
+    if names is None:
+        names = tuple(f"t{i}" for i in range(len(dims)))
+    if len(names) != len(dims):
+        raise ValueError("names/dims length mismatch")
+    arr = np.array(devs, dtype=object).reshape(tuple(reversed(dims)))
+    return Mesh(arr, tuple(reversed(names)))
+
+
+_REGISTRY: dict[tuple, tuple[Mesh | None, TorusFactorization]] = {}
+_SPLIT_COUNTER = {"cart_creates": 0, "lookups": 0}
+
+
+def _key(devices_fingerprint, dims, names, variant):
+    return (devices_fingerprint, tuple(dims), tuple(names or ()), variant)
+
+
+def get_factorization(mesh: Mesh, axis_names=None, *, d: int | None = None,
+                      variant: str = "natural") -> TorusFactorization:
+    """Look up (or create and cache) the factorization descriptor.
+
+    If ``axis_names`` is given, the mesh's existing axes are the torus
+    dimensions (fastest digit first).  Otherwise the *product* of all mesh
+    axes is factorized into ``d`` balanced factors via ``dims_create`` —
+    the caller should then build the Cartesian mesh with ``cart_create``.
+    """
+    if axis_names is not None:
+        axis_names = (axis_names,) if isinstance(axis_names, str) \
+            else tuple(axis_names)
+        dims = tuple(mesh.shape[n] for n in axis_names)
+    else:
+        p = math.prod(mesh.shape.values())
+        if d is None:
+            raise ValueError("need either axis_names or d")
+        dims = tuple(reversed(dims_create(p, d)))  # fastest digit smallest
+        axis_names = tuple(f"t{i}" for i in range(d))
+    fingerprint = tuple(id(dev) for dev in mesh.devices.flat[:1]) \
+        + (mesh.devices.size,)
+    key = _key(fingerprint, dims, axis_names, variant)
+    _SPLIT_COUNTER["lookups"] += 1
+    if key not in _REGISTRY:
+        _SPLIT_COUNTER["cart_creates"] += 1
+        _REGISTRY[key] = (None, TorusFactorization(axis_names, dims, variant))
+    return _REGISTRY[key][1]
+
+
+def free(descriptor: TorusFactorization) -> None:
+    """The delete-callback analogue: evict all cache entries using it."""
+    dead = [k for k, (_, v) in _REGISTRY.items() if v == descriptor]
+    for k in dead:
+        del _REGISTRY[k]
+
+
+def cache_stats() -> dict[str, int]:
+    return dict(_SPLIT_COUNTER)

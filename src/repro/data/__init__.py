@@ -1,0 +1,7 @@
+"""Data pipeline: deterministic synthetic LM streams with resume cursors."""
+
+from .pipeline import (CopyTaskConfig, DataConfig, SyntheticLM,
+                       make_copy_task_batch, make_lm_batch)
+
+__all__ = ["CopyTaskConfig", "DataConfig", "SyntheticLM",
+           "make_copy_task_batch", "make_lm_batch"]

@@ -1,0 +1,110 @@
+"""Deterministic synthetic LM data pipeline.
+
+Production shape without external data: batches are a pure function of
+``(seed, step)`` so any host can regenerate any shard — restart/elastic
+resume needs only the step cursor (stored in checkpoints), and two hosts
+never disagree about batch contents.  Two generators:
+
+* ``make_lm_batch`` — Zipf-ish random token stream (throughput/memory
+  benchmarking; loss floor is ~ln(vocab) entropy).
+* ``make_copy_task_batch`` — prefix + SEP + copy-of-prefix sequences: a
+  *learnable* task so end-to-end examples show genuinely decreasing loss
+  (induction behaviour), not just optimizer motion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+
+
+@dataclass(frozen=True)
+class CopyTaskConfig(DataConfig):
+    prefix_len: int = 0   # default seq_len // 2 - 1
+
+    @property
+    def plen(self):
+        return self.prefix_len or (self.seq_len // 2)
+
+
+def _fold(cfg: DataConfig, step: int):
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+
+
+def make_lm_batch(cfg: DataConfig, step: int):
+    """Zipf-distributed tokens; labels = next token."""
+    key = _fold(cfg, step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab
+    u = jax.random.uniform(key, (B, S + 1), minval=1e-6, maxval=1.0)
+    # inverse-CDF power law (Zipf-ish) truncated to the vocab
+    ranks = jnp.floor((1.0 / u) ** 0.9)
+    toks = (ranks.astype(jnp.int32) - 1) % V
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+            "mask": jnp.ones((B, S), jnp.float32)}
+
+
+def make_copy_task_batch(cfg: CopyTaskConfig, step: int):
+    key = _fold(cfg, step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab
+    plen = cfg.plen
+    assert 2 * plen + 1 <= S + 1, "prefix too long for seq_len"
+    sep = V - 1
+    prefix = jax.random.randint(key, (B, plen), 0, V - 1)
+    seq = jnp.concatenate(
+        [prefix, jnp.full((B, 1), sep, jnp.int32), prefix,
+         jnp.zeros((B, S + 1 - 2 * plen - 1), jnp.int32)], axis=1)
+    tokens, labels = seq[:, :-1], seq[:, 1:]
+    # only the copy region is scored
+    pos = jnp.arange(S)[None]
+    mask = ((pos >= plen) & (pos < 2 * plen)).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (B, S))
+    return {"tokens": tokens, "labels": labels, "mask": mask}
+
+
+class SyntheticLM:
+    """Stateful iterator facade with a resumable cursor and device
+    placement (batch sharded over the DP axes)."""
+
+    def __init__(self, cfg: DataConfig, mesh: Mesh | None = None,
+                 task: str = "lm", start_step: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.task = task
+        self.step = start_step
+
+    def _place(self, batch):
+        if self.mesh is None:
+            return batch
+        axes = tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+        part = axes if len(axes) > 1 else (axes[0] if axes else None)
+        sh = NamedSharding(self.mesh, P(part))   # shard batch dim only
+        return {k: jax.device_put(v, sh) for k, v in batch.items()}
+
+    def next(self):
+        fn = make_copy_task_batch if self.task == "copy" else make_lm_batch
+        batch = fn(self.cfg, self.step)
+        self.step += 1
+        return self._place(batch)
+
+    # ---- checkpointable cursor ----
+    def state_dict(self):
+        return {"step": self.step, "seed": self.cfg.seed,
+                "task": self.task}
+
+    def load_state_dict(self, d):
+        assert d["seed"] == self.cfg.seed and d["task"] == self.task, \
+            "resuming with a different data stream"
+        self.step = int(d["step"])

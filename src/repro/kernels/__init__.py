@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel module pairs with an oracle in ``ref.py`` and a jit'd public
+wrapper in ``ops.py``; tests sweep shapes/dtypes in interpret mode.
+"""
+
+from .ops import attention, expert_matmul, pack_round, unpack_round
+
+__all__ = ["attention", "expert_matmul", "pack_round", "unpack_round"]

@@ -1,0 +1,130 @@
+"""Flash attention Pallas kernel (TPU target, validated in interpret mode).
+
+Online-softmax attention with BlockSpec VMEM tiling, supporting causal and
+sliding-window masks and GQA (the KV head is selected in the *index map*,
+so grouped heads re-read the same KV tiles from HBM — no materialized
+``repeat``).  Grid: (batch, q_heads, q_blocks, kv_blocks) with the KV block
+innermost; running max / sum / accumulator live in VMEM scratch across the
+kv-block loop (the classic FlashAttention-2 schedule, re-tiled for the MXU:
+block shapes default to multiples of 128 on the contraction dims).
+
+The kernel is the *target* implementation for real TPUs; on this CPU-only
+container it is exercised with ``interpret=True`` against
+``ref.ref_attention``.  The model stack selects between this kernel and
+the XLA path via ``AttentionImpl`` in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale, causal, window, block_q, block_k, kv_len, kv_offset):
+    """One (q-block, kv-block) step of online-softmax attention."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)           # (bk, dh)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + kv_offset
+    cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cols < kv_len
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] \
+        + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)          # fully-masked rows -> 0
+        o_ref[0, 0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of n that is <= preferred (MXU-friendly when n is)."""
+    b = min(preferred, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "kv_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, kv_offset: int = 0,
+                    interpret: bool = False):
+    """q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh); Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, Dh) attention output in q's dtype.
+    """
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dh)
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Skv, block_k)
+    grid = (B, Hq, Sq // bq, Skv // bk)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, kv_len=Skv, kv_offset=kv_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
+            # GQA: the kv head is h // group — the "derived datatype" of
+            # this kernel: grouped q heads address the same KV tiles.
+            pl.BlockSpec((1, 1, bk, Dh),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, Dh),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dh),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dh), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running sum l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,71 @@
+"""Grouped (per-expert) matmul Pallas kernel — the MoE FFN hot spot.
+
+After the factorized all-to-all dispatch, each device holds a dense
+``(E_local, capacity, d_model)`` tile of tokens per local expert; the
+expert FFN is a batch of independent matmuls with *different* weights per
+group — a grouped matmul.  Grid: (experts, C-blocks, N-blocks, K-blocks)
+with the contraction (K) innermost, accumulating in a VMEM f32 scratch so
+the MXU sees (bc x bk) @ (bk x bn) tiles; block sizes default to 128
+(MXU-aligned) and shrink to divisors for small shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _gmm_kernel(lhs_ref, rhs_ref, o_ref, acc_ref):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        lhs_ref[0].astype(jnp.float32), rhs_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _finish():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    b = min(preferred, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_c", "block_n", "block_k", "interpret"))
+def grouped_matmul(lhs, rhs, *, block_c: int = 128, block_n: int = 128,
+                   block_k: int = 128, interpret: bool = False):
+    """(E, C, K) @ (E, K, N) -> (E, C, N), independent matmul per expert."""
+    E, C, K = lhs.shape
+    E2, K2, N = rhs.shape
+    if (E, K) != (E2, K2):
+        raise ValueError(f"shape mismatch {lhs.shape} @ {rhs.shape}")
+    bc = _pick_block(C, block_c)
+    bn = _pick_block(N, block_n)
+    bk = _pick_block(K, block_k)
+    grid = (E, C // bc, N // bn, K // bk)
+
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bk), lambda e, ic, jn, ik: (e, ic, ik)),
+            pl.BlockSpec((1, bk, bn), lambda e, ic, jn, ik: (e, ik, jn)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bn), lambda e, ic, jn, ik: (e, ic, jn)),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), lhs.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bn), jnp.float32)],
+        interpret=interpret,
+    )(lhs, rhs)

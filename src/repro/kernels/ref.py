@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the mathematical specification its kernel is tested
+against with ``assert_allclose`` over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_attention(q, k, v, *, causal: bool = True,
+                  window: int | None = None, scale: float | None = None,
+                  kv_offset: int = 0):
+    """Reference multi-head attention with GQA, causal and sliding-window
+    masking.
+
+    q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh) with Hq % Hkv == 0.
+    ``window``: sliding-window size (keys within [r - window + 1, r]).
+    ``kv_offset``: absolute position of q[0] relative to k[0] (decode).
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(Dh)
+    # GQA via reshape (NOT jnp.repeat): keeps the KV-head axis intact so
+    # head sharding survives GSPMD, and feeds the MXU in the input dtype
+    # with f32 accumulation (casting inputs to f32 first would double the
+    # all-gather bytes of sharded operands — see EXPERIMENTS §Perf).
+    qg = q.reshape(B, Hkv, group, Sq, Dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    Skv = k.shape[2]
+    rows = jnp.arange(Sq)[:, None] + kv_offset
+    cols = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, Sq, Dh).astype(q.dtype)
+
+
+def ref_block_reorder(x, positions, extent: int, n_peers: int):
+    """Reference of the round-k datatype *pack*: the explicit-copy block
+    gather the paper's zero-copy formulation eliminates.
+
+    x: (p, B).  out[j * len(positions) + t] = x[positions[t] + j * extent]
+    for peer j in [0, n_peers) — i.e. composite messages laid out
+    contiguously per peer (what an MPI implementation without derived
+    datatypes would have to do with explicit packing).
+    """
+    positions = jnp.asarray(positions)
+    idx = (positions[None, :] + jnp.arange(n_peers)[:, None] * extent)
+    return x[idx.reshape(-1)]
+
+
+def ref_block_unreorder(y, positions, extent: int, n_peers: int):
+    """Inverse of ``ref_block_reorder`` (the unpack side)."""
+    positions = jnp.asarray(positions)
+    idx = (positions[None, :] + jnp.arange(n_peers)[:, None] * extent)
+    p = y.shape[0]
+    out = jnp.zeros_like(y)
+    return out.at[idx.reshape(-1)].set(y[: idx.size])
+
+
+def ref_gmm(lhs, rhs, *, preferred_dtype=jnp.float32):
+    """Grouped (per-expert) matmul: (E, C, M) x (E, M, N) -> (E, C, N)."""
+    out = jnp.einsum("ecm,emn->ecn", lhs.astype(preferred_dtype),
+                     rhs.astype(preferred_dtype))
+    return out.astype(lhs.dtype)

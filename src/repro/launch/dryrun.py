@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract (ShapeDtypeStruct, zero-allocation)
+parameters/optimizer state/inputs with their production shardings, lowers
+the jitted step, compiles it for the 16x16 (single-pod) and 2x16x16
+(multi-pod) meshes, and records:
+
+  * ``memory_analysis``  — per-device buffer footprint (proves it fits)
+  * ``cost_analysis``    — per-device HLO FLOPs / bytes (roofline inputs)
+  * collective bytes by kind (parsed from compiled HLO; roofline input)
+
+Artifacts go to ``benchmarks/artifacts/dryrun/<cell>.json`` and are read
+by ``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, \
+    input_specs
+from repro.core.hlo_inspect import (collective_bytes_by_stride,
+                                    loop_aware_analysis, parse_hlo)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, make_serve_step, make_train_step
+from repro.models.common import abstract_params
+from repro.models.transformer import cache_logical_axes
+from repro.optim import AdamW, AdamWConfig, cosine_with_warmup
+from repro.parallel.sharding import ShardingRules, resolve_spec
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "artifacts" / "dryrun"
+
+
+def _sharded_sds(shape, dtype, logical, mesh, rules):
+    sh = NamedSharding(mesh, resolve_spec(shape, logical, mesh, rules))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def _abstract_opt_state(p_abs):
+    mu = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                       sharding=s.sharding), p_abs)
+    return {"mu": mu, "nu": mu,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _abstract_batch(cfg, shape_cell, mesh, rules):
+    specs = input_specs(cfg, shape_cell)
+    out = {}
+    for k, v in specs.items():
+        if not hasattr(v, "shape"):
+            continue
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = _sharded_sds(v.shape, v.dtype, logical, mesh, rules)
+    return out
+
+
+def _abstract_caches(model, cfg, B, W, mesh, rules):
+    shapes = jax.eval_shape(lambda: model.init_caches(B, W))
+    logical = cache_logical_axes(cfg) if not cfg.encoder_layers else None
+    if logical is None:
+        # enc-dec: states {k,v,slot_pos} stacked over decoder layers
+        kv = (None, "batch", "kv_heads", "seq_sp", None)
+        logical = {"states": {"k": kv, "v": kv,
+                              "slot_pos": (None, "batch", "seq_sp")},
+                   "pos": ("batch",)}
+    return jax.tree.map(
+        lambda s, ax: _sharded_sds(s.shape, s.dtype, ax, mesh, rules),
+        shapes, logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct) or
+        (isinstance(x, tuple) and all(isinstance(a, (str, type(None)))
+                                      for a in x)))
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v in ("true", "True", "false", "False"):
+        v = v in ("true", "True")
+    elif v == "none":
+        v = None
+    else:
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+    return k, v
+
+
+def apply_overrides(cfg, rules, overrides):
+    """``--set key=value`` config overrides; ``rules.<logical>=axis1+axis2``
+    (or ``rules.<logical>=`` for replicated) rewires the sharding rules."""
+    rule_kw, cfg_kw = {}, {}
+    for kv in overrides or ():
+        k, v = _parse_override(kv)
+        if k.startswith("rules."):
+            axes = tuple(a for a in str(v or "").split("+") if a)
+            rule_kw[k[len("rules."):]] = axes
+        else:
+            cfg_kw[k] = v
+    if cfg_kw:
+        cfg = cfg.replace(**cfg_kw)
+    if rule_kw:
+        rules = (rules or ShardingRules()).override(**rule_kw)
+    return cfg, rules
+
+
+def build_lowered(arch: str, shape_name: str, mesh_kind: str,
+                  rules: ShardingRules | None = None, overrides=None):
+    """Lower one cell; returns (cfg, model, lowered) or raises.
+    Shared by the dry-run driver and benchmarks.dissect."""
+    cfg = get_config(arch)
+    cfg, rules = apply_overrides(cfg, rules, overrides)
+    shape_cell = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_cell)
+    if not ok:
+        raise ValueError(f"skipped: {reason}")
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = rules or ShardingRules()
+    model = build_model(cfg)
+    p_abs = abstract_params(model.specs(), cfg.pdtype, mesh, rules)
+    if shape_cell.kind == "train":
+        opt = AdamW(AdamWConfig(lr=cosine_with_warmup(3e-4, 100, 10000)))
+        step = make_train_step(model, opt, mesh, rules)
+        o_abs = _abstract_opt_state(p_abs)
+        b_abs = _abstract_batch(cfg, shape_cell, mesh, rules)
+        return cfg, model, jax.jit(step).lower(p_abs, o_abs, b_abs)
+    if shape_cell.kind == "prefill":
+        from repro.models.model_api import make_prefill_fn
+        prefill = make_prefill_fn(model, mesh, rules)
+        b_abs = _abstract_batch(cfg, shape_cell, mesh, rules)
+        args = [p_abs, b_abs["tokens"]]
+        if "frontend_embeds" in b_abs:
+            args.append(b_abs["frontend_embeds"])
+        return cfg, model, jax.jit(prefill).lower(*args)
+    spec = input_specs(cfg, shape_cell)
+    B, W = spec["batch"], spec["cache_len"]
+    serve = make_serve_step(model, mesh, rules)
+    c_abs = _abstract_caches(model, cfg, B, W, mesh, rules)
+    t_abs = _sharded_sds((B, 1), jnp.int32, ("batch", None), mesh, rules)
+    args = [p_abs, c_abs, t_abs]
+    if cfg.encoder_layers:
+        m_abs = _sharded_sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                             cfg.cdtype, ("batch", None, None), mesh,
+                             rules)
+        args.append(m_abs)
+    return cfg, model, jax.jit(serve).lower(*args)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rules: ShardingRules | None = None, verbose=True,
+             overrides=None):
+    cfg = get_config(arch)
+    cfg, rules = apply_overrides(cfg, rules, overrides)
+    shape_cell = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_cell)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = rules or ShardingRules()
+    model = build_model(cfg)
+    t0 = time.time()
+
+    p_abs = abstract_params(model.specs(), cfg.pdtype, mesh, rules)
+
+    if shape_cell.kind == "train":
+        opt = AdamW(AdamWConfig(lr=cosine_with_warmup(3e-4, 100, 10000)))
+        step = make_train_step(model, opt, mesh, rules)
+        o_abs = _abstract_opt_state(p_abs)
+        b_abs = _abstract_batch(cfg, shape_cell, mesh, rules)
+        lowered = jax.jit(step).lower(p_abs, o_abs, b_abs)
+    elif shape_cell.kind == "prefill":
+        from repro.models.model_api import make_prefill_fn
+        prefill = make_prefill_fn(model, mesh, rules)
+        b_abs = _abstract_batch(cfg, shape_cell, mesh, rules)
+        args = [p_abs, b_abs["tokens"]]
+        if "frontend_embeds" in b_abs:
+            args.append(b_abs["frontend_embeds"])
+        lowered = jax.jit(prefill).lower(*args)
+    else:  # decode
+        spec = input_specs(cfg, shape_cell)
+        B, W = spec["batch"], spec["cache_len"]
+        serve = make_serve_step(model, mesh, rules)
+        c_abs = _abstract_caches(model, cfg, B, W, mesh, rules)
+        t_abs = _sharded_sds((B, 1), jnp.int32, ("batch", None), mesh,
+                             rules)
+        args = [p_abs, c_abs, t_abs]
+        if cfg.encoder_layers:
+            m_abs = _sharded_sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                 cfg.cdtype, ("batch", None, None), mesh,
+                                 rules)
+            args.append(m_abs)
+        lowered = jax.jit(serve).lower(*args)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    rep = parse_hlo(text)
+    # Loop-aware accounting: while (scan) bodies weighted by trip count —
+    # XLA's cost analysis counts them once, understating a 64-layer model
+    # by ~64x.  See core/hlo_inspect.loop_aware_analysis.
+    la = loop_aware_analysis(text)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok",
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": la["flops"],
+        "bytes_accessed_per_device": la["bytes_proxy"],
+        "collective_bytes_per_device": la["collective_bytes"],
+        "collective_bytes_by_kind": la["collective_bytes_by_kind"],
+        "flops_per_device_loop_once": cost.get("flops", -1.0),
+        "bytes_accessed_loop_once": cost.get("bytes accessed", -1.0),
+        "collective_bytes_loop_once": rep.collective_bytes(),
+        "collective_bytes_by_stride": {
+            f"{k}@{s}": v for (k, s), v in
+            collective_bytes_by_stride(text).items()},
+        "collective_bytes_by_span": {
+            f"{k}@{s}": v for (k, s), v in
+            collective_bytes_by_stride(text, use_span=True).items()},
+        "collective_op_counts": {
+            k: v for k, v in rep.op_counts.items()
+            if any(k.startswith(c) for c in
+                   ("all-", "reduce-", "collective-", "ragged-"))},
+        "memory_analysis": _mem_dict(mem),
+        "params_total": model_param_count(model),
+        "params_active": active_param_count(cfg),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+              f"compile {t_compile:.1f}s, "
+              f"flops/dev {record['flops_per_device']:.3g}, "
+              f"coll B/dev {record['collective_bytes_per_device']:.3g}")
+        print("  memory_analysis:", record["memory_analysis"])
+    return record
+
+
+def _mem_dict(mem):
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = getattr(mem, attr)
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def model_param_count(model) -> int:
+    from repro.models.common import param_count
+    return param_count(model.specs())
+
+
+def active_param_count(cfg) -> int:
+    return cfg.param_count_estimate(active_only=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute existing artifacts")
+    ap.add_argument("--set", action="append", dest="overrides",
+                    metavar="KEY=VALUE",
+                    help="config override (e.g. remat_policy=dots, "
+                         "a2a_backend=direct, rules.act_embed=)")
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix for variant runs")
+    args = ap.parse_args()
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCH_NAMES if args.all or not args.arch else [args.arch]
+    shapes = tuple(SHAPES) if args.all or not args.shape else [args.shape]
+
+    failures = []
+    tag = f"__{args.tag}" if args.tag else ""
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                out = ARTIFACTS / f"{arch}__{shape}__{mesh_kind}{tag}.json"
+                if out.exists() and not args.force:
+                    print(f"[dryrun] cached {out.name}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mesh_kind,
+                                   overrides=args.overrides)
+                    if args.tag:
+                        rec["tag"] = args.tag
+                        rec["overrides"] = args.overrides
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": mesh_kind, "status": "failed",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(out.name)
+                out.write_text(json.dumps(rec, indent=1))
+    if failures:
+        print(f"FAILED cells: {failures}")
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model definitions: composable layers + the 10 assigned architectures."""
+
+from .config import ModelConfig
+from .model_api import (build_model, make_loss_fn, make_prefill_fn,
+                        make_serve_step, make_train_step)
+
+__all__ = ["ModelConfig", "build_model", "make_loss_fn", "make_prefill_fn",
+           "make_serve_step", "make_train_step"]

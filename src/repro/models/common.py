@@ -1,0 +1,171 @@
+"""Parameter-spec infrastructure and common layers (no flax — pure JAX).
+
+Every layer declares its parameters as ``ParamSpec`` trees carrying shape,
+*logical* sharding axes, and initializer.  From one spec tree we derive:
+concrete initialization (training), ``ShapeDtypeStruct`` stand-ins
+(dry-run: no allocation), and ``NamedSharding`` trees (pjit in/out specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.parallel.sharding import ShardingRules, resolve_spec
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float | None = None    # None -> fan-in 1/sqrt(fan_in)
+    dtype: Any = None             # None -> model param_dtype
+
+    def initializer(self, key, param_dtype):
+        dtype = self.dtype or param_dtype
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init in ("normal", "embed"):
+            fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+            scale = self.scale if self.scale is not None \
+                else 1.0 / math.sqrt(max(1, fan_in))
+            return (jax.random.normal(key, self.shape) * scale).astype(dtype)
+        raise ValueError(self.init)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key, param_dtype=jnp.bfloat16):
+    """Concrete parameter tree from a spec tree (training path)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.initializer(k, param_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs, param_dtype=jnp.bfloat16, mesh: Mesh | None = None,
+                    rules: ShardingRules | None = None):
+    """ShapeDtypeStruct tree (optionally with shardings) — dry-run path."""
+    def mk(s: ParamSpec):
+        dtype = s.dtype or param_dtype
+        if mesh is not None:
+            sh = NamedSharding(mesh, resolve_spec(s.shape, s.logical, mesh,
+                                                  rules))
+            return jax.ShapeDtypeStruct(s.shape, dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(s.shape, dtype)
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def param_shardings(specs, mesh: Mesh, rules: ShardingRules | None = None):
+    def mk(s: ParamSpec):
+        return NamedSharding(mesh, resolve_spec(s.shape, s.logical, mesh,
+                                                rules))
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def stack_specs(specs, n: int, axis_name: str | None = None):
+    """Stack a spec tree for scan-over-layers: prepend a layer dimension."""
+    def mk(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.logical,
+                         s.init, s.scale, s.dtype)
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Numerics / layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(dtype)
+
+
+def dense(x, w, b=None, compute_dtype=jnp.bfloat16):
+    """x @ w (+ b), computing in ``compute_dtype`` with f32 accumulation."""
+    out = jax.lax.dot_general(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (np.arange(0, dh, 2) / dh))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, Dh); positions: (..., S) int32 absolute positions."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d_model: int):
+    pos = np.arange(max_len)[:, None]
+    i = np.arange(d_model)[None, :]
+    angle = pos / np.power(10000, (2 * (i // 2)) / d_model)
+    table = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(table, jnp.float32)
+
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0):
+    """logits (..., V) f32, labels (...,) int32.  Returns mean loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return loss

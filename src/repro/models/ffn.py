@@ -1,0 +1,37 @@
+"""Dense FFN blocks (SwiGLU / GELU-MLP) with TP sharding."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, gelu, silu
+from repro.parallel.sharding import constrain
+from .config import ModelConfig
+
+
+def ffn_specs(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "w1": ParamSpec((D, F), ("embed_fsdp", "mlp")),
+            "w3": ParamSpec((D, F), ("embed_fsdp", "mlp")),
+            "w2": ParamSpec((F, D), ("mlp", "embed_fsdp")),
+        }
+    return {
+        "w1": ParamSpec((D, F), ("embed_fsdp", "mlp")),
+        "b1": ParamSpec((F,), ("mlp",), init="zeros"),
+        "w2": ParamSpec((F, D), ("mlp", "embed_fsdp")),
+        "b2": ParamSpec((D,), (None,), init="zeros"),
+    }
+
+
+def ffn_block(p, x, cfg: ModelConfig):
+    cd = cfg.cdtype
+    x = x.astype(cd)
+    if cfg.act == "swiglu":
+        h = silu(x @ p["w1"].astype(cd)) * (x @ p["w3"].astype(cd))
+        h = constrain(h, ("batch", None, "mlp"))
+        return h @ p["w2"].astype(cd)
+    h = gelu(x @ p["w1"].astype(cd) + p["b1"].astype(cd))
+    h = constrain(h, ("batch", None, "mlp"))
+    return h @ p["w2"].astype(cd) + p["b2"].astype(cd)

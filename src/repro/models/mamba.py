@@ -1,0 +1,119 @@
+"""Mamba (selective SSM) block — jamba's mixer layer.
+
+Training/prefill: ``lax.scan`` over time with state ``(B, Ein, n)`` (the
+selective recurrence is inherently sequential; the scan keeps HLO O(1) in
+sequence length and the state O(Ein*n), never materializing (S, Ein, n)).
+Decode: single-step state update (O(1) per token — this is why jamba runs
+the ``long_500k`` shape).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, silu
+from .config import ModelConfig
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    Ein = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    r = _dt_rank(cfg)
+    return {
+        "in_proj": ParamSpec((D, 2 * Ein), ("embed_fsdp", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, Ein), (None, "mlp")),
+        "conv_b": ParamSpec((Ein,), ("mlp",), init="zeros"),
+        "x_proj": ParamSpec((Ein, r + 2 * n), ("mlp", None)),
+        "dt_proj": ParamSpec((r, Ein), (None, "mlp")),
+        "dt_bias": ParamSpec((Ein,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((Ein, n), ("mlp", None), init="ones"),
+        "D_skip": ParamSpec((Ein,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((Ein, D), ("mlp", "embed_fsdp")),
+    }
+
+
+def _ssm_params(p, xc, cfg):
+    """Input-dependent (dt, B, C) from the conv branch xc: (B, S, Ein)."""
+    n, r = cfg.ssm_state, _dt_rank(cfg)
+    proj = xc.astype(jnp.float32) @ p["x_proj"].astype(jnp.float32)
+    dt_in, Bm, Cm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,Ein)
+    return dt, Bm, Cm
+
+
+def _conv_step(p, x_window):
+    """Causal depthwise conv over a (B, K, Ein) window -> (B, Ein)."""
+    w = p["conv_w"].astype(jnp.float32)                   # (K, Ein)
+    return jnp.einsum("bke,ke->be", x_window.astype(jnp.float32), w) \
+        + p["conv_b"].astype(jnp.float32)
+
+
+def mamba_block(p, x, cfg: ModelConfig, state=None):
+    """x: (B, S, D).  state: None (train/prefill from scratch) or dict with
+    'ssm' (B, Ein, n) and 'conv' (B, K-1, Ein) for incremental decode.
+    Returns (y, new_state)."""
+    B, S, D = x.shape
+    Ein = cfg.ssm_expand * D
+    K = cfg.ssm_conv
+    n = cfg.ssm_state
+    cd = cfg.cdtype
+
+    xz = x.astype(cd) @ p["in_proj"].astype(cd)            # (B, S, 2Ein)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        conv_tail = jnp.zeros((B, K - 1, Ein), cd)
+        ssm0 = jnp.zeros((B, Ein, n), jnp.float32)
+    else:
+        conv_tail = state["conv"]
+        ssm0 = state["ssm"]
+
+    # causal depthwise conv via explicit window (supports S==1 decode)
+    xs_pad = jnp.concatenate([conv_tail.astype(cd), xs], axis=1)
+    windows = jnp.stack([xs_pad[:, t:t + K] for t in range(S)], axis=1) \
+        if S <= 4 else None
+    if windows is not None:
+        xc = jax.vmap(lambda w: _conv_step(p, w), in_axes=1, out_axes=1)(
+            windows)
+    else:
+        w = p["conv_w"].astype(jnp.float32)
+        xc = sum(xs_pad[:, K - 1 - i: K - 1 - i + S].astype(jnp.float32)
+                 * w[K - 1 - i] for i in range(K))
+        xc = xc + p["conv_b"].astype(jnp.float32)
+    xc = silu(xc)                                          # (B, S, Ein)
+
+    dt, Bm, Cm = _ssm_params(p, xc, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (Ein, n)
+
+    def step(h, inputs):
+        xc_t, dt_t, B_t, C_t = inputs                      # (B,Ein),(B,Ein),(B,n),(B,n)
+        da = jnp.exp(dt_t[..., None] * A[None])            # (B, Ein, n)
+        db = dt_t[..., None] * B_t[:, None, :]             # (B, Ein, n)
+        h = da * h + db * xc_t[..., None].astype(jnp.float32)
+        y = jnp.einsum("ben,bn->be", h, C_t)
+        return h, y
+
+    if cfg.recurrent_step_remat:
+        step = jax.checkpoint(step)
+    xs_t = jnp.moveaxis(xc.astype(jnp.float32), 1, 0)      # (S, B, Ein)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    B_t = jnp.moveaxis(Bm, 1, 0)
+    C_t = jnp.moveaxis(Cm, 1, 0)
+    h_final, ys = jax.lax.scan(step, ssm0, (xs_t, dt_t, B_t, C_t))
+    y = jnp.moveaxis(ys, 0, 1)                             # (B, S, Ein)
+    y = y + xc.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+    y = (y.astype(cd) * silu(z))
+    out = y @ p["out_proj"].astype(cd)
+
+    new_state = {"ssm": h_final,
+                 "conv": xs_pad[:, -(K - 1):].astype(cd)}
+    return out, new_state

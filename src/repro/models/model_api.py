@@ -1,0 +1,110 @@
+"""Unified model construction + step functions (train / prefill / decode).
+
+``build_model(cfg)`` returns a ``Model`` (decoder-only) or ``EncDecModel``
+(whisper).  ``make_train_step`` / ``make_serve_step`` produce the jittable
+functions the launcher, dry-run and examples all share.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import Model
+from repro.parallel.sharding import ShardingRules
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.encoder_layers > 0:
+        return EncDecModel(cfg)
+    return Model(cfg)
+
+
+def make_loss_fn(model, mesh=None, rules: ShardingRules | None = None):
+    def loss_fn(params, batch):
+        return model.loss(params, batch, mesh=mesh, rules=rules)
+    return loss_fn
+
+
+def make_train_step(model, optimizer, mesh=None,
+                    rules: ShardingRules | None = None,
+                    grad_accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_accum > 1`` splits the batch into microbatches inside the
+    jitted step (lax.scan), averaging gradients before one optimizer
+    update — the memory knob for large global batches.
+    """
+    loss_fn = make_loss_fn(model, mesh, rules)
+
+    def grads_of(params, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+
+            def body(acc, mb):
+                g, m = grads_of(params, mb)
+                acc_g, acc_m = acc
+                return (jax.tree.map(jnp.add, acc_g, g),
+                        jax.tree.map(jnp.add, acc_m, m)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"ce_loss": 0.0, "aux_loss": 0.0, "total_loss": 0.0}
+            zero_m = jax.tree.map(jnp.float32, zero_m)
+            (gsum, msum), _ = jax.lax.scan(body, (zero_g, zero_m), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            metrics = jax.tree.map(lambda m: m / grad_accum, msum)
+        params, opt_state, gnorm = optimizer.update(params, grads,
+                                                    opt_state)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model, mesh=None, rules: ShardingRules | None = None,
+                    memory_fn=None):
+    """One greedy decode step: (params, caches, tokens_t[, memory]) ->
+    (next_tokens, logits, caches)."""
+    def serve_step(params, caches, tokens_t, memory=None):
+        if memory is not None:
+            logits, caches = model.decode_step(params, tokens_t, caches,
+                                               memory, mesh=mesh,
+                                               rules=rules)
+        else:
+            logits, caches = model.decode_step(params, tokens_t, caches,
+                                               mesh=mesh, rules=rules)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return serve_step
+
+
+def make_prefill_fn(model, mesh=None, rules: ShardingRules | None = None):
+    """Full-sequence prefill returning last-position logits (the
+    prefill_32k dry-run shape lowers this)."""
+    def prefill(params, tokens, frontend_embeds=None):
+        if frontend_embeds is not None:
+            logits, _ = model.forward(params, tokens, mesh=mesh,
+                                      rules=rules,
+                                      frontend_embeds=frontend_embeds)
+        else:
+            logits, _ = model.forward(params, tokens, mesh=mesh,
+                                      rules=rules)
+        return logits[:, -1]
+
+    return prefill

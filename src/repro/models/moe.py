@@ -1,0 +1,233 @@
+"""Mixture-of-Experts with expert parallelism over the *factorized torus
+all-to-all* — the primary consumer of the paper's collective.
+
+Dispatch layout (capacity-based, GShard-style):
+
+* The EP group spans the mesh axes ``ep_axes(mesh)`` — ``("data",)`` on a
+  single pod, ``("data", "pod")`` across pods.  Virtual expert rank
+  ``v = data + |data| * pod``: experts are *owned* along "data" and
+  *replicated* across "pod" (storage stays exact ``(E, ...)``; the virtual
+  ``(G, ...)`` view is a ``reshape`` when ``E >= G`` and a ``tile`` when
+  ``E < G`` — tiling makes replica gradients sum automatically).
+* Each device scatters its top-k routed tokens into ``(G, E_loc, C, D)``
+  composite blocks — *exactly* the paper's ``p``-block send buffer — and
+  one ``factorized_all_to_all`` per direction moves them: on the multi-pod
+  mesh this is the d=2 schedule (ICI "data" round, then DCN "pod" round),
+  the paper's hierarchical decomposition.
+* Expert FFN runs as a grouped matmul (``kernels.expert_matmul``) with the
+  hidden dim tensor-parallel over "model" (one psum per layer).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+from repro.core.factorized import factorized_all_to_all
+from repro.core.pipelined import pipelined_all_to_all
+from repro.kernels import ops as kops
+from repro.models.common import ParamSpec, silu, gelu
+from repro.parallel.sharding import ShardingRules, constrain, ep_axes, \
+    resolve_spec
+from .config import ModelConfig
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((D, E), (None, None), dtype=jnp.float32),
+        "w1": ParamSpec((E, D, F), ("expert", "embed_fsdp", "mlp")),
+        "w3": ParamSpec((E, D, F), ("expert", "embed_fsdp", "mlp")),
+        "w2": ParamSpec((E, F, D), ("expert", "mlp", "embed_fsdp")),
+    }
+
+
+def _group_geometry(cfg: ModelConfig, mesh):
+    """(axes, G, E_loc, R): EP axes, group size, experts/rank, replicas."""
+    if mesh is None:
+        return (), 1, cfg.n_experts, 1
+    axes = ep_axes(mesh)
+    G = math.prod(mesh.shape[a] for a in axes)
+    E = cfg.n_experts
+    if E >= G:
+        if E % G:
+            raise ValueError(f"n_experts={E} not divisible by EP group {G}")
+        return axes, G, E // G, 1
+    if G % E:
+        raise ValueError(f"EP group {G} not divisible by n_experts={E}")
+    return axes, G, 1, G // E
+
+
+def _virtual_weights(w, G: int):
+    """(E, ...) -> (G, E_loc, ...) virtual-expert view (reshape or tile)."""
+    E = w.shape[0]
+    if E >= G:
+        return w.reshape(G, E // G, *w.shape[1:])
+    R = G // E
+    return jnp.tile(w, (R,) + (1,) * (w.ndim - 1)) \
+        .reshape(G, 1, *w.shape[1:])
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int, n_slots: int) -> int:
+    c = math.ceil(cfg.capacity_factor * cfg.top_k * n_tokens / n_slots)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
+               R, C, tp_axis, reduce_axes):
+    """Per-device MoE computation (runs inside shard_map, or standalone when
+    there is no mesh).  x: (B_loc, S, D); w*: (1, E_loc, ...) local slices
+    of the virtual-expert arrays."""
+    B, S, D = x.shape
+    N = B * S
+    E = cfg.n_experts
+    cd = cfg.cdtype
+    xt = x.reshape(N, D)
+    w1, w3, w2 = w1[0], w3[0], w2[0]
+
+    # ---- routing (f32) ----
+    logits = xt.astype(jnp.float32) @ router_w.astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)     # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- per-expert positions (order: token-major, k-minor) ----
+    flat_e = expert_idx.reshape(-1)                              # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos_e = jnp.cumsum(onehot, axis=0) - 1                       # inclusive-1
+    pos_e = jnp.take_along_axis(pos_e, flat_e[:, None], 1)[:, 0]
+
+    if E >= G:   # experts partitioned over ranks
+        v_idx = flat_e // E_loc
+        sub_idx = flat_e % E_loc
+        slot_pos = pos_e
+    else:        # experts replicated R times: round-robin across replicas
+        spread = pos_e % R
+        v_idx = flat_e + E * spread       # tile layout: replica r at r*E+e
+        sub_idx = jnp.zeros_like(flat_e)
+        slot_pos = pos_e // R
+    keep = slot_pos < C
+    c_idx = jnp.where(keep, slot_pos, C)  # C = out-of-bounds -> dropped
+
+    # ---- dispatch scatter: (G, E_loc, C, D) composite blocks ----
+    tok_idx = jnp.repeat(jnp.arange(N), cfg.top_k)
+    disp = jnp.zeros((G, E_loc, C, D), cd)
+    disp = disp.at[v_idx, sub_idx, c_idx].set(
+        xt[tok_idx].astype(cd), mode="drop")
+
+    # ---- the paper's collective: blocks to expert owners ----
+    def a2a(blocks):
+        if not axes:
+            return blocks
+        flat = blocks.reshape(G, -1)
+        backend = cfg.a2a_backend
+        if backend == "tuned":
+            # the paper's §5 conclusion as policy: factorized for the
+            # small-message (latency) regime, direct for bandwidth-bound
+            # dispatch, decided by the alpha-beta model with per-axis
+            # (ICI vs DCN) links.
+            from repro.core.tuning import DCN, ICI, choose_algorithm
+            links = tuple(DCN if a == "pod" else ICI for a in axes)
+            sizes = tuple(jax.lax.axis_size(a) for a in axes)
+            sched = choose_algorithm(
+                sizes, links,
+                block_bytes=flat.shape[1] * flat.dtype.itemsize)
+            backend = "direct" if sched.kind == "direct" else "factorized"
+        if backend == "pipelined":
+            out = pipelined_all_to_all(flat, axes, n_chunks=2)
+        elif backend == "direct":
+            from repro.core.factorized import direct_all_to_all
+            out = direct_all_to_all(flat, axes)
+        else:
+            out = factorized_all_to_all(flat, axes,
+                                        variant=cfg.a2a_variant)
+        return out.reshape(blocks.shape)
+
+    recv = checkpoint_name(a2a(disp), "moe_recv")                         # (G, E_loc, C, D)
+
+    # ---- expert FFN (grouped matmul; TP over `tp_axis` on the hidden dim)
+    xe = recv.transpose(1, 0, 2, 3).reshape(E_loc, G * C, D)
+    h = silu(kops.expert_matmul(xe, w1.astype(cd))) \
+        * kops.expert_matmul(xe, w3.astype(cd)) \
+        if cfg.act == "swiglu" else \
+        gelu(kops.expert_matmul(xe, w1.astype(cd)))
+    ye = kops.expert_matmul(h, w2.astype(cd))          # partial over F shard
+    if tp_axis is not None:
+        ye = jax.lax.psum(ye, tp_axis)
+    ye = ye.reshape(E_loc, G, C, D).transpose(1, 0, 2, 3)
+
+    # ---- reverse collective + combine ----
+    back = checkpoint_name(a2a(ye), "moe_back")
+    pad = jnp.zeros((G, E_loc, 1, D), cd)
+    backp = jnp.concatenate([back, pad], axis=2)       # dropped -> zeros
+    yk = backp[v_idx, sub_idx, c_idx]                  # (N*k, D)
+    yk = yk.reshape(N, cfg.top_k, D)
+    gates = (gate_vals * keep.reshape(N, cfg.top_k)).astype(jnp.float32)
+    y = jnp.einsum("nkd,nk->nd", yk.astype(jnp.float32), gates)
+
+    # ---- load-balance aux loss (GShard): E * sum_e f_e * P_e; = 1 when
+    # perfectly balanced ----
+    f_e = jnp.mean(onehot.astype(jnp.float32), axis=0)   # sums to 1
+    p_e = jnp.mean(probs, axis=0)
+    if reduce_axes:
+        f_e = jax.lax.pmean(f_e, reduce_axes)
+        p_e = jax.lax.pmean(p_e, reduce_axes)
+    aux = E * jnp.sum(f_e * p_e)
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_block(p, x, cfg: ModelConfig, mesh=None,
+              rules: ShardingRules | None = None):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    axes, G, E_loc, R = _group_geometry(cfg, mesh)
+    B, S, D = x.shape
+
+    w1 = _virtual_weights(p["w1"], G)
+    w3 = _virtual_weights(p["w3"], G)
+    w2 = _virtual_weights(p["w2"], G)
+
+    if mesh is None:
+        C = _capacity(cfg, B * S, max(cfg.n_experts, G))
+        return _moe_inner(x, p["router"], w1, w3, w2, cfg=cfg, axes=(),
+                          G=G, E_loc=E_loc, R=R, C=C, tp_axis=None,
+                          reduce_axes=())
+
+    rules = rules or ShardingRules()
+    w1 = constrain(w1, ("expert_virtual", None, None, "mlp"), mesh, rules)
+    w3 = constrain(w3, ("expert_virtual", None, None, "mlp"), mesh, rules)
+    w2 = constrain(w2, ("expert_virtual", None, "mlp", None), mesh, rules)
+
+    x_spec = resolve_spec(x.shape, ("batch", None, None), mesh, rules)
+    part = x_spec[0]
+    batch_axes = () if part is None else \
+        ((part,) if isinstance(part, str) else tuple(part))
+    n_batch_shards = math.prod([mesh.shape[a] for a in batch_axes]) \
+        if batch_axes else 1
+    n_loc = (B // n_batch_shards) * S
+    C = _capacity(cfg, n_loc, max(cfg.n_experts, G))
+    tp_axis = "model" if "model" in mesh.shape and mesh.shape["model"] > 1 \
+        else None
+    reduce_axes = batch_axes
+
+    wv_spec = resolve_spec(w1.shape, ("expert_virtual", None, None, "mlp"),
+                           mesh, rules)
+    w2_spec = resolve_spec(w2.shape, ("expert_virtual", None, "mlp", None),
+                           mesh, rules)
+    router_spec = P(None, None)
+
+    inner = functools.partial(
+        _moe_inner, cfg=cfg, axes=axes, G=G, E_loc=E_loc, R=R, C=C,
+        tp_axis=tp_axis, reduce_axes=reduce_axes)
+
+    y, aux = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(x_spec, router_spec, wv_spec, wv_spec, w2_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,   # aux is value-replicated after pmean; see note
+    )(x, p["router"], w1, w3, w2)
+    return y, aux

@@ -1,0 +1,256 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows arXiv:2405.04517: the mLSTM cell keeps a per-head matrix memory
+``C: (hd, hd)`` with exponential input gating and a stabilizer state; the
+sLSTM cell keeps scalar memories with exponential gating.  Both are
+``lax.scan`` recurrences (state O(B*H*hd^2) / O(B*D)) with single-step
+decode — xLSTM therefore runs the ``long_500k`` shape.
+
+Block structure (paper Fig. 9/10 simplified): mLSTM = pre-norm ->
+up-projection (2x) -> causal conv + q/k/v -> mLSTM cell -> group norm ->
+gated (SiLU) down-projection.  sLSTM = pre-norm -> sLSTM cell (4 gates) ->
+group norm -> GLU-style projection (4/3 factor).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm, silu
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    Din = 2 * D                      # up-projection factor 2
+    H = cfg.n_heads
+    hd = Din // H
+    return {
+        "up": ParamSpec((D, 2 * Din), ("embed_fsdp", "mlp")),
+        "wq": ParamSpec((Din, Din), ("mlp", None)),
+        "wk": ParamSpec((Din, Din), ("mlp", None)),
+        "wv": ParamSpec((Din, Din), ("mlp", None)),
+        "wif": ParamSpec((Din, 2 * H), ("mlp", None)),  # i/f gate preacts
+        "wo": ParamSpec((Din, Din), ("mlp", None)),     # output gate
+        "gn": ParamSpec((Din,), ("mlp",), init="ones"),
+        "down": ParamSpec((Din, D), ("mlp", "embed_fsdp")),
+    }
+
+
+def mlstm_block(p, x, cfg: ModelConfig, state=None):
+    """x: (B, S, D) -> (y, state).  state: {C: (B,H,hd,hd), n: (B,H,hd),
+    m: (B,H)}."""
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    H = cfg.n_heads
+    Din = 2 * D
+    hd = Din // H
+
+    up = x.astype(cd) @ p["up"].astype(cd)
+    xi, z = jnp.split(up, 2, axis=-1)                     # (B,S,Din) each
+
+    def heads(w):
+        return (xi.astype(jnp.float32)
+                @ w.astype(jnp.float32)).reshape(B, S, H, hd)
+    q, k, v = heads(p["wq"]), heads(p["wk"]), heads(p["wv"])
+    k = k / jnp.sqrt(hd)
+    gates = xi.astype(jnp.float32) @ p["wif"].astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates.reshape(B, S, 2, H), 2, axis=2)
+    i_pre, f_pre = i_pre[:, :, 0], f_pre[:, :, 0]         # (B, S, H)
+    o_gate = jax.nn.sigmoid(
+        xi.astype(jnp.float32) @ p["wo"].astype(jnp.float32))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    if cfg.xlstm_chunk and S > cfg.xlstm_chunk \
+            and S % cfg.xlstm_chunk == 0:
+        h, (Cf, nf, mf) = _mlstm_chunked(
+            q, k, v, i_pre, f_pre, (C0, n0, m0), cfg.xlstm_chunk,
+            step_remat=cfg.recurrent_step_remat)
+        h = h.reshape(B, S, Din)
+        h = rms_norm(h, p["gn"]) * o_gate
+        y = (h.astype(cd) * silu(z)) @ p["down"].astype(cd)
+        return y, {"C": Cf, "n": nf, "m": mf}
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp    # (B,H,hd) x3, (B,H) x2
+        log_f = -jax.nn.softplus(-f_t)   # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_s = jnp.exp(i_t - m_new)[..., None]              # (B,H,1)
+        f_s = jnp.exp(log_f + m - m_new)[..., None]
+        C = f_s[..., None] * C + i_s[..., None] * \
+            (v_t[..., :, None] * k_t[..., None, :])        # (B,H,hd,hd)
+        n = f_s * n + i_s * k_t
+        num = jnp.einsum("bhij,bhj->bhi", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q_t)),
+                          jnp.exp(-m_new))[..., None]
+        h = num / den
+        return (C, n, m_new), h
+
+    if cfg.recurrent_step_remat:
+        step = jax.checkpoint(step)
+    q_s = jnp.moveaxis(q, 1, 0)      # (S, B, H, hd)
+    k_s = jnp.moveaxis(k, 1, 0)
+    v_s = jnp.moveaxis(v, 1, 0)
+    i_s_seq = jnp.moveaxis(i_pre, 1, 0)   # (S, B, H)
+    f_s_seq = jnp.moveaxis(f_pre, 1, 0)
+    (Cf, nf, mf), hs = jax.lax.scan(
+        step, (C0, n0, m0), (q_s, k_s, v_s, i_s_seq, f_s_seq))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, Din)        # (B,S,H,hd)->
+    h = rms_norm(h, p["gn"]) * o_gate
+    y = (h.astype(cd) * silu(z)) @ p["down"].astype(cd)
+    return y, {"C": Cf, "n": nf, "m": mf}
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, state, L: int,
+                   step_remat: bool = False):
+    """Chunkwise-parallel mLSTM (beyond-paper perf optimization).
+
+    The per-step recurrence reads+writes the (hd, hd) matrix memory every
+    token — the dominant HBM term for xLSTM training (hd^2 >> hd).  The
+    chunkwise form (cf. GLA / xLSTM official kernels) touches the state
+    once per chunk of L tokens and handles intra-chunk interactions with
+    an (L, L) attention-like matrix:
+
+      a_s  = log i_s - b_s                (b_s = cumsum of log f within chunk)
+      M_t  = max(m_prev, cummax_s<=t a_s)  (running stabilizer)
+      S_ts = (q_t . k_s) e^{a_s - M_t}     for s <= t  (intra)
+      inter_t = e^{m_prev - M_t} (C_prev q_t)
+      h_t  = (inter_t + sum_s S_ts v_s) / max(|l_t|, e^{-(b_t + M_t)})
+      l_t  = e^{m_prev - M_t}(n_prev . q_t) + sum_s S_ts
+
+    State I/O drops by ~L; validated against the per-step scan in
+    tests/test_models.py.
+    """
+    B, S, H, hd = q.shape
+    nC = S // L
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                      # (B,H,hd,hd),(B,H,hd),(B,H)
+        qc, kc, vc, ic, fc = inp             # (B,L,H,hd) x3, (B,L,H) x2
+        qc = qc.transpose(0, 2, 1, 3)        # (B,H,L,hd)
+        kc = kc.transpose(0, 2, 1, 3)
+        vc = vc.transpose(0, 2, 1, 3)
+        ic = ic.transpose(0, 2, 1)           # (B,H,L)
+        fc = fc.transpose(0, 2, 1)
+
+        log_f = -jax.nn.softplus(-fc)        # (B,H,L)
+        b = jnp.cumsum(log_f, axis=-1)       # b_t
+        a = ic - b                           # a_s
+        M = jnp.maximum(m[..., None], jax.lax.cummax(a, axis=2))  # (B,H,L)
+
+        # intra-chunk scores
+        scores = jnp.einsum("bhtd,bhsd->bhts", qc, kc)
+        decay = jnp.exp(a[:, :, None, :] - M[..., None])   # e^{a_s - M_t}
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        W = jnp.where(mask[None, None], scores * decay, 0.0)
+
+        inter_scale = jnp.exp(m[..., None] - M)            # (B,H,L)
+        inter_num = jnp.einsum("bhij,bhtj->bhti", C, qc) \
+            * inter_scale[..., None]
+        num = inter_num + jnp.einsum("bhts,bhsd->bhtd", W, vc)
+        l = jnp.einsum("bhj,bhtj->bht", n, qc) * inter_scale \
+            + jnp.sum(W, axis=-1)
+        m_t = b + M
+        den = jnp.maximum(jnp.abs(l), jnp.exp(-m_t))[..., None]
+        h = num / den                                       # (B,H,L,hd)
+
+        # end-of-chunk state
+        M_L = M[..., -1]
+        # e^{b_L - b_s + li_s - m_new} = e^{a_s - M_L}  (m_new = b_L + M_L)
+        w_end = jnp.exp(a - M_L[..., None])
+        C_new = jnp.exp(m - M_L)[..., None, None] * C + \
+            jnp.einsum("bhs,bhsd,bhse->bhde", w_end, vc, kc)
+        n_new = jnp.exp(m - M_L)[..., None] * n + \
+            jnp.einsum("bhs,bhsd->bhd", w_end, kc)
+        m_new = b[..., -1] + M_L
+        return (C_new, n_new, m_new), h.transpose(0, 2, 1, 3)  # (B,L,H,hd)
+
+    qs = q.reshape(B, nC, L, H, hd).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nC, L, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nC, L, H, hd).transpose(1, 0, 2, 3, 4)
+    is_ = i_pre.reshape(B, nC, L, H).transpose(1, 0, 2, 3)
+    fs = f_pre.reshape(B, nC, L, H).transpose(1, 0, 2, 3)
+    if step_remat:
+        chunk_step = jax.checkpoint(chunk_step)
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, state,
+                                    (qs, ks, vs, is_, fs))
+    # hs: (nC, B, L, H, hd) -> (B, S, H, hd)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return h, (Cf, nf, mf)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    F = max(1, 4 * D // 3) // 8 * 8 or 8
+    return {
+        "w_gates": ParamSpec((D, 4 * D), ("embed_fsdp", "mlp")),
+        # block-diagonal per-head recurrence (xLSTM paper §sLSTM: heads
+        # do not mix through R) — H x smaller recurrent matrix, read
+        # every timestep, so this also cuts the recurrent HBM term by H.
+        "r_gates": ParamSpec((H, D // H, 4 * (D // H)), (None, None, None)),
+        "gn": ParamSpec((D,), (None,), init="ones"),
+        "up1": ParamSpec((D, F), ("embed_fsdp", "mlp")),
+        "up2": ParamSpec((D, F), ("embed_fsdp", "mlp")),
+        "down": ParamSpec((F, D), ("mlp", "embed_fsdp")),
+    }
+
+
+def slstm_block(p, x, cfg: ModelConfig, state=None):
+    """x: (B, S, D) -> (y, state).  state: {c,n,m,h}: (B, D) each."""
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    H = cfg.n_heads
+    Dh = D // H
+
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        c0, n0, h0 = z, z + 1e-6, z
+        m0 = jnp.full((B, D), -1e30, jnp.float32)
+    else:
+        c0, n0, m0, h0 = state["c"], state["n"], state["m"], state["h"]
+
+    wx = x.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)
+    r = p["r_gates"].astype(jnp.float32)        # (H, Dh, 4*Dh)
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        # block-diagonal recurrence: (B,H,Dh) x (H,Dh,4Dh) -> (B,H,4Dh)
+        rec = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, Dh), r)
+        pre = wx_t + rec.reshape(B, H, 4, Dh).transpose(0, 2, 1, 3) \
+            .reshape(B, 4 * D)
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c = f_s * c + i_s * jnp.tanh(zt)
+        n = f_s * n + i_s
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    if cfg.recurrent_step_remat:
+        step = jax.checkpoint(step)
+    (cf, nf, mf, hf), hs = jax.lax.scan(
+        step, (c0, n0, m0, h0), jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                             # (B, S, D)
+    h = rms_norm(h, p["gn"]).astype(cd)
+    y = (silu(h @ p["up1"].astype(cd)) * (h @ p["up2"].astype(cd))) \
+        @ p["down"].astype(cd)
+    return y, {"c": cf, "n": nf, "m": mf, "h": hf}

@@ -1,0 +1,78 @@
+"""AdamW with sharded moments, global-norm clipping, and schedules.
+
+Moments inherit the parameter sharding automatically (they are tree-mapped
+from the params), so FSDP-sharded params get FSDP-sharded optimizer state
+— the ZeRO-1 memory layout falls out of GSPMD.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .transforms import clip_by_global_norm, global_norm
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    moment_dtype: str = "float32"
+
+    def lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    config: AdamWConfig = field(default_factory=AdamWConfig)
+
+    def init(self, params):
+        mdt = jnp.dtype(self.config.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, params, grads, state):
+        cfg = self.config
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        if cfg.clip_norm is not None:
+            grads = clip_by_global_norm(grads, cfg.clip_norm, gnorm)
+        lr = cfg.lr_at(step)
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(mu.dtype)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * (g32 * g32)
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+            if cfg.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                delta = delta + cfg.weight_decay * p.astype(mu.dtype)
+            newp = p.astype(mu.dtype) - lr * delta
+            return newp.astype(p.dtype), mu, nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n)
+               for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        new_nu = tdef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm

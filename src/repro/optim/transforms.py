@@ -1,0 +1,104 @@
+"""Gradient transforms: clipping, int8-compressed all-reduce, replica tying.
+
+``compressed_psum`` is the distributed-optimization trick for slow (DCN)
+data-parallel axes: gradients are blockwise int8-quantized before the
+cross-pod reduction, cutting DP all-reduce bytes 4x (bf16) at the cost of
+quantization noise.  It runs inside ``shard_map`` (explicit-collective
+training path); the jit/GSPMD path can apply ``compress_dequantize`` as a
+numerical-effect simulation of the same trick.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float, gnorm=None):
+    gnorm = global_norm(tree) if gnorm is None else gnorm
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale)
+                        .astype(x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# int8 block-quantized gradient compression
+# ---------------------------------------------------------------------------
+
+def _quantize_int8(x, block: int = 256):
+    """Blockwise symmetric int8 quantization; returns (q, scales, shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, x.shape
+
+
+def _dequantize_int8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_dequantize(tree, block: int = 256):
+    """Quantize->dequantize round trip (models compressed all-reduce noise
+    in the GSPMD path, where the collective itself is compiler-inserted)."""
+    def f(x):
+        if x.ndim == 0 or x.size < block:
+            return x
+        q, s, sh = _quantize_int8(x, block)
+        return _dequantize_int8(q, s, sh).astype(x.dtype)
+    return jax.tree.map(f, tree)
+
+
+def compressed_psum(tree, axis_name, block: int = 256):
+    """int8-compressed gradient all-reduce over ``axis_name`` (shard_map).
+
+    Each rank quantizes locally (int8 + per-block f32 scales), the int8
+    payloads and scales are ``all_gather``-ed (int8 stays int8 on the
+    wire), and the sum is reconstructed locally — the result is the exact
+    sum of the per-rank quantized gradients, i.e. the only error is each
+    rank's own int8 rounding.
+
+    Wire bytes: ``n*(size + 4*size/block)`` int8 vs ``~4*size`` for a ring
+    bf16 all-reduce — a ~2x cut for n=2 (the cross-pod DCN axis, where it
+    matters); for large n prefer a reduce-scatter formulation.
+    """
+    def f(x):
+        if x.ndim == 0 or x.size < block:
+            return jax.lax.psum(x, axis_name)
+        q, scale, shape = _quantize_int8(x, block)
+        q_all = jax.lax.all_gather(q, axis_name)          # (n, nb, block) i8
+        s_all = jax.lax.all_gather(scale, axis_name)      # (n, nb, 1) f32
+        total = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+        return total.reshape(-1)[: x.size].reshape(shape).astype(x.dtype)
+    return jax.tree.map(f, tree)
+
+
+def tie_expert_replica_grads(grads_tree, n_replicas: int, keys=("w1", "w3",
+                                                                "w2")):
+    """Average gradients across tiled expert replicas (used only by the
+    *stored-virtual* MoE variant; the default tile-at-compute variant ties
+    replicas automatically through the ``jnp.tile`` pullback)."""
+    if n_replicas <= 1:
+        return grads_tree
+
+    def f(path, g):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name not in keys or g.ndim < 1 or g.shape[0] % n_replicas:
+            return g
+        E = g.shape[0] // n_replicas
+        avg = g.reshape(n_replicas, E, *g.shape[1:]).mean(0)
+        return jnp.tile(avg, (n_replicas,) + (1,) * (g.ndim - 1))
+    return jax.tree_util.tree_map_with_path(f, grads_tree)

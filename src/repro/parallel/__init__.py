@@ -1,0 +1,8 @@
+"""Parallelism: sharding rules, Ulysses SP, mesh helpers."""
+
+from .pipeline import bubble_fraction, make_pipelined_forward, pipeline_apply
+from .sharding import (DEFAULT_RULES, ShardingRules, constrain, ep_axes,
+                       named_sharding, resolve_spec, use_mesh)
+
+__all__ = ["DEFAULT_RULES", "bubble_fraction", "make_pipelined_forward", "pipeline_apply", "ShardingRules", "constrain", "ep_axes",
+           "named_sharding", "resolve_spec", "use_mesh"]

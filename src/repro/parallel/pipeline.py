@@ -1,0 +1,112 @@
+"""Pipeline parallelism: GPipe-style stages over a mesh axis.
+
+Stages live on the "pod" axis (or any named axis): stage s owns layers
+[s*L/S, (s+1)*L/S).  Microbatches stream through with
+``collective_permute`` boundary transfers; the classic GPipe schedule
+runs S + M - 1 ticks (bubble fraction (S-1)/(S+M-1)).
+
+Implementation notes (JAX-native, cf. the praxis/maxtext circular
+schedules): all stages execute the same program (SPMD); at tick t, stage
+s computes microbatch t - s (predicated with ``jnp.where`` masks — lax
+control flow keeps the HLO O(1) in ticks via ``lax.fori_loop``... here a
+python loop over ticks keeps it simple and unrolled: M and S are small).
+The per-stage layer parameters arrive pre-sharded over the stage axis
+(leading dim = n_stages) so each device reads only its stage's slice.
+
+This is the *forward* pipeline used for inference/serving of stacked
+blocks; for training it composes with jax.grad (the transposed permutes
+run the reverse schedule automatically).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, params_stages, x_microbatches, *, axis: str,
+                   n_stages: int):
+    """Run inside shard_map: stage-parallel pipelined application.
+
+    Args:
+      stage_fn: (stage_params, x) -> y, one stage's computation.
+      params_stages: pytree with leading dim 1 per device (this stage's
+        params slice, leading axis already sharded over ``axis``).
+      x_microbatches: (M, mb, ...) microbatches — replicated input; stage
+        0 consumes them in order.
+    Returns:
+      (M, mb, ...) outputs as produced by the LAST stage (valid on every
+      device; intermediate stages' copies are don't-care and masked).
+    """
+    M = x_microbatches.shape[0]
+    stage_idx = jax.lax.axis_index(axis)
+    my_params = jax.tree.map(lambda p: p[0], params_stages)
+
+    n_ticks = n_stages + M - 1
+    carry = jnp.zeros_like(x_microbatches[0])
+    outputs = jnp.zeros_like(x_microbatches)
+
+    for t in range(n_ticks):
+        # stage s works on microbatch m = t - s when 0 <= m < M
+        m = t - stage_idx
+        active = (m >= 0) & (m < M)
+        m_clamped = jnp.clip(m, 0, M - 1)
+        # stage 0 ingests a fresh microbatch; others take the permuted
+        # carry from the previous stage
+        x_in = jnp.where(stage_idx == 0,
+                         jax.lax.dynamic_index_in_dim(
+                             x_microbatches, m_clamped, keepdims=False),
+                         carry)
+        y = stage_fn(my_params, x_in)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # last stage writes its finished microbatch to the output buffer
+        is_last = stage_idx == n_stages - 1
+        outputs = jax.lax.cond(
+            jnp.logical_and(active, is_last),
+            lambda o: o.at[m_clamped].set(y),
+            lambda o: o,
+            outputs)
+        # shift activations downstream: stage s -> s+1 (ring permute; the
+        # wraparound edge is masked by `active` at the receiver)
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        carry = jax.lax.ppermute(y, axis, perm)
+
+    # only the last stage ever writes `outputs` (zeros elsewhere), so a
+    # psum over the stage axis broadcasts the finished microbatches.
+    return jax.lax.psum(outputs, axis) if n_stages > 1 else outputs
+
+
+def make_pipelined_forward(stage_fn, mesh: Mesh, *, axis: str = "pod",
+                           n_microbatches: int = 4,
+                           params_spec=P("pod"), x_spec=P()):
+    """Host-level: jit-able pipelined forward over ``axis``.
+
+    ``stage_fn(params_slice, x) -> y`` with y.shape == x.shape (a residual
+    block stack).  Params' leading dim must equal the axis size.
+    """
+    n_stages = mesh.shape[axis]
+
+    def run(params_stages, x):
+        B = x.shape[0]
+        assert B % n_microbatches == 0
+        mbs = x.reshape(n_microbatches, B // n_microbatches, *x.shape[1:])
+
+        inner = functools.partial(pipeline_apply, stage_fn, axis=axis,
+                                  n_stages=n_stages)
+        out = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(params_spec, x_spec),   # P prefixes broadcast over
+            out_specs=x_spec,                 # the params pytree
+            check_vma=False,
+        )(params_stages, mbs)
+        return out.reshape(B, *x.shape[1:])
+
+    return jax.jit(run)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)

@@ -1,0 +1,101 @@
+"""Ring attention: sequence-sharded exact attention via neighbor exchange.
+
+The alternative to Ulysses for long-context prefill: Q stays put,
+KV blocks rotate around the SP axis with ``ppermute`` (torus
+neighbor-communication — the same dimension-local discipline the paper's
+algorithm imposes), and partial softmax statistics merge online
+(flash-style).  Communication per step is one KV block to one neighbor —
+p-1 rounds of nearest-neighbor traffic instead of one all-to-all, the
+latency/bandwidth dual of the paper's tradeoff.
+
+Causal masking uses absolute positions of the rotating KV shard.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import resolve_spec
+
+
+def _merge(m1, l1, o1, m2, l2, o2):
+    """Merge two partial flash-attention states (m, l, unnormalized o)."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    return m, l1 * a1 + l2 * a2, o1 * a1[..., None] + o2 * a2[..., None]
+
+
+def _partial_attn(q, k, v, q_pos, k_pos, *, scale, causal, window):
+    """Unnormalized attention of q against one KV shard.
+    q: (B,H,Sq,hd); k/v: (B,Hkv,Sk,hd). Returns (m, l, o)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, Sq, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def ring_attention(q, k, v, cfg=None, *, causal=True, window=None,
+                   mesh: Mesh | None = None, axis: str = "model",
+                   rules=None):
+    """q,k,v: (B, H*, S, hd) sequence-sharded over ``axis``; returns
+    attention output with the same sharding.  Exact (== full attention)."""
+    window = window if window is not None else \
+        (cfg.window if cfg is not None else None)
+    if mesh is None or axis not in mesh.shape or mesh.shape[axis] == 1:
+        from repro.kernels import ops as kops
+        return kops.attention(q, k, v, causal=causal, window=window)
+    n = mesh.shape[axis]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    spec = resolve_spec(q.shape, ("batch", None, "seq_sp", None), mesh,
+                        rules)
+
+    def inner(ql, kl, vl):
+        B, Hq, Sl, hd = ql.shape
+        Hkv = kl.shape[1]
+        g = Hq // Hkv
+        rank = jax.lax.axis_index(axis)
+        q_pos = rank * Sl + jnp.arange(Sl)
+
+        m = jnp.full((B, Hkv, g, Sl), -1e30, jnp.float32)
+        l = jnp.zeros((B, Hkv, g, Sl), jnp.float32)
+        o = jnp.zeros((B, Hkv, g, Sl, hd), jnp.float32)
+        kv_rank = rank
+        k_cur, v_cur = kl, vl
+        perm = [(i, (i - 1) % n) for i in range(n)]   # rotate left
+        for step in range(n):
+            k_pos = kv_rank * Sl + jnp.arange(Sl)
+            m2, l2, o2 = _partial_attn(ql, k_cur, v_cur, q_pos, k_pos,
+                                       scale=scale, causal=causal,
+                                       window=window)
+            m, l, o = _merge(m, l, o, m2, l2, o2)
+            if step < n - 1:
+                k_cur = jax.lax.ppermute(k_cur, axis, perm)
+                v_cur = jax.lax.ppermute(v_cur, axis, perm)
+                kv_rank = (kv_rank + 1) % n
+        safe = jnp.where(l == 0.0, 1.0, l)
+        out = (o / safe[..., None]).reshape(B, Hq, Sl, hd)
+        return out.astype(ql.dtype)
+
+    return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)

@@ -1,0 +1,148 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code annotates every tensor dimension with a *logical* axis name
+("batch", "embed", "heads", "expert", ...).  The rules map logical names
+to physical mesh axes; the resolver drops physical axes that do not divide
+the dimension or are already consumed by another dimension of the same
+tensor — tiny models (whisper) then simply replicate where big models
+shard, with no per-arch special cases.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules: logical name -> preferred physical axes, in priority order.
+# Tuples mean "shard over the product of these axes".
+DEFAULT_RULES: tuple[tuple[str, tuple[str, ...]], ...] = (
+    ("batch", ("pod", "data")),
+    ("fsdp", ("pod", "data")),      # parameter sharding (ZeRO/FSDP dim)
+    ("seq", ()),                    # replicated by default
+    ("seq_sp", ("model",)),         # sequence parallelism (Ulysses / decode KV)
+    ("embed", ()),                  # activation d_model: replicated
+    ("embed_tp", ("model",)),       # param d_model rows under TP
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("mlp", ("model",)),
+    ("vocab", ("model",)),
+    ("act_embed", ("model",)),      # activation d_model between layers
+    ("expert", ("data",)),          # stored expert dim (owner axis)
+    ("expert_virtual", ("pod", "data")),  # virtual expert dim (EP group)
+    ("embed_fsdp", ("pod", "data")),      # param row dim: FSDP sharding
+    ("conv", ()),
+    ("state", ()),
+)
+
+
+def ep_axes(mesh: Mesh) -> tuple[str, ...]:
+    """EP all-to-all axes, fastest digit first (owner axis, then replicas).
+
+    The virtual-expert rank is ``data_coord + |data| * pod_coord``: experts
+    are owned along "data" and replicated across "pod", so the multi-pod
+    dispatch is a d=2 factorized all-to-all (ICI round then DCN round)."""
+    return tuple(a for a in ("data", "pod") if a in mesh.shape)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple[tuple[str, tuple[str, ...]], ...] = DEFAULT_RULES
+
+    def lookup(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        for name, axes in self.rules:
+            if name == logical:
+                return tuple(axes)
+        raise KeyError(f"no rule for logical axis {logical!r}")
+
+    def override(self, **kw) -> "ShardingRules":
+        new = []
+        seen = set()
+        for name, axes in self.rules:
+            if name in kw:
+                new.append((name, tuple(kw[name]) if kw[name] else ()))
+                seen.add(name)
+            else:
+                new.append((name, axes))
+        for name in kw:
+            if name not in seen:
+                new.append((name, tuple(kw[name]) if kw[name] else ()))
+        return ShardingRules(tuple(new))
+
+
+def resolve_spec(shape: tuple[int, ...],
+                 logical: tuple[str | None, ...],
+                 mesh: Mesh,
+                 rules: ShardingRules | None = None) -> P:
+    """Resolve logical axes to a PartitionSpec for ``shape`` on ``mesh``.
+
+    Fallback policy (in order): drop physical axes missing from the mesh;
+    drop axes already used by an earlier dimension; greedily keep the
+    longest prefix of the rule's axis tuple whose size product divides the
+    dimension.  The result is always valid for (shape, mesh).
+    """
+    rules = rules or ShardingRules()
+    if len(logical) != len(shape):
+        raise ValueError(f"logical {logical} does not match shape {shape}")
+    used: set[str] = set()
+    parts: list = []
+    for dim, name in zip(shape, logical):
+        want = [a for a in rules.lookup(name)
+                if a in mesh.shape and a not in used]
+        # longest prefix whose product divides dim
+        best: tuple[str, ...] = ()
+        acc = 1
+        for a in want:
+            if dim % (acc * mesh.shape[a]) == 0:
+                acc *= mesh.shape[a]
+                best = best + (a,)
+            else:
+                break
+        used.update(best)
+        if not best:
+            parts.append(None)
+        elif len(best) == 1:
+            parts.append(best[0])
+        else:
+            parts.append(best)
+    return P(*parts)
+
+
+def named_sharding(shape, logical, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, logical, mesh, rules))
+
+
+def constrain(x, logical: tuple[str | None, ...], mesh: Mesh | None = None,
+              rules: ShardingRules | None = None):
+    """``with_sharding_constraint`` by logical axes (no-op without mesh)."""
+    mesh = mesh or get_current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_spec(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+_CURRENT_MESH: list[Mesh] = []
+
+
+class use_mesh:
+    """Context manager installing the mesh used by ``constrain``."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _CURRENT_MESH.append(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _CURRENT_MESH.pop()
+        return False
+
+
+def get_current_mesh() -> Mesh | None:
+    return _CURRENT_MESH[-1] if _CURRENT_MESH else None

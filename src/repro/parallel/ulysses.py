@@ -1,0 +1,89 @@
+"""Ulysses-style sequence parallelism via the factorized all-to-all.
+
+For long-context prefill the activations are sequence-sharded over the SP
+axis ("model").  Attention needs full sequences per head, so we re-shard
+seq<->heads with a *tiled* all-to-all in each direction (DeepSpeed-Ulysses;
+here decomposed by the paper's algorithm when the SP group spans multiple
+mesh axes).  GQA handling: when KV heads cannot absorb the SP degree, KV
+is all-gathered along the sequence instead (small relative to Q for GQA).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.factorized import factorized_all_to_all_tiled
+from repro.kernels import ops as kops
+from repro.parallel.sharding import resolve_spec
+
+
+def _sp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("model",) if a in mesh.shape
+                 and mesh.shape[a] > 1)
+
+
+def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
+                      rules=None):
+    """q: (B, Hq, S, hd) sequence-sharded; returns (B, Hq, S, hd) with the
+    same sharding.  Inside: heads-sharded full-sequence attention."""
+    mesh = mesh
+    if mesh is None:
+        from repro.parallel.sharding import get_current_mesh
+        mesh = get_current_mesh()
+    if mesh is None:
+        return kops.attention(q, k, v, causal=causal, window=cfg.window,
+                              impl=cfg.attention_impl)
+    axes = axes or _sp_axes(mesh)
+    sp = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    if sp == 1:
+        return kops.attention(q, k, v, causal=causal, window=cfg.window,
+                              impl=cfg.attention_impl)
+
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    if Hq % sp:
+        raise ValueError(f"Ulysses needs Hq({Hq}) % sp({sp}) == 0")
+    kv_a2a = Hkv % sp == 0
+    msf = tuple(reversed(axes))   # most-significant-first for specs
+
+    q_spec = resolve_spec(q.shape, ("batch", None, "seq_sp", None),
+                          mesh, rules)
+
+    group = Hq // Hkv
+    hq_loc = Hq // sp
+
+    def inner(ql, kl, vl):
+        # ql: (B_loc, Hq, S_loc, hd) -> heads sharded, full seq
+        qh = factorized_all_to_all_tiled(ql, axes, split_axis=1,
+                                         concat_axis=2)
+        if kv_a2a:
+            kh = factorized_all_to_all_tiled(kl, axes, 1, 2)
+            vh = factorized_all_to_all_tiled(vl, axes, 1, 2)
+        else:
+            # GQA with Hkv < sp: gather full KV along seq, then select the
+            # global KV heads matching this device's local q-head range so
+            # the kernel's h_q // group mapping stays correct.
+            kh = jax.lax.all_gather(kl, msf, axis=2, tiled=True)
+            vh = jax.lax.all_gather(vl, msf, axis=2, tiled=True)
+            rank = jnp.zeros((), jnp.int32)
+            for a in msf:   # most-significant-first linearization
+                rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            kv_idx = (rank * hq_loc + jnp.arange(hq_loc)) // group
+            kh = jnp.take(kh, kv_idx, axis=1)
+            vh = jnp.take(vh, kv_idx, axis=1)
+        oh = kops.attention(qh, kh, vh, causal=causal, window=cfg.window,
+                            impl=cfg.attention_impl)
+        # back: heads full, seq sharded
+        return factorized_all_to_all_tiled(oh, axes, split_axis=2,
+                                           concat_axis=1)
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(q_spec, q_spec, q_spec),
+        out_specs=q_spec,
+        check_vma=False,
+    )(q, k, v)

@@ -1,0 +1,6 @@
+"""Fault-tolerant training runtime."""
+
+from .trainer import Trainer, TrainerConfig
+from .watchdog import StragglerWatchdog
+
+__all__ = ["Trainer", "TrainerConfig", "StragglerWatchdog"]

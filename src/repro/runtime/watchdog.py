@@ -1,0 +1,59 @@
+"""Straggler / hang detection from per-step wall times.
+
+At multi-pod scale the common failure modes are (a) a slow host
+(straggler) stretching every step, and (b) a hung collective.  Both show
+up in the step-time series.  The watchdog keeps a robust running estimate
+(median + MAD over a window) and classifies each step; the trainer policy
+reacts (log, checkpoint-now, or abort-for-restart).
+
+On a real cluster the per-host step times come from the coordination
+service; here the single process stands in for the fleet, and the tests
+inject synthetic slow steps.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerWatchdog:
+    window: int = 50
+    slow_factor: float = 2.5       # step > factor * median -> straggler
+    hang_factor: float = 10.0      # step > factor * median -> presumed hang
+    min_samples: int = 5
+    _times: deque = field(default_factory=lambda: deque(maxlen=256))
+    events: list = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> str:
+        """Classify a step: 'ok' | 'straggler' | 'hang'."""
+        history = list(self._times)[-self.window:]
+        self._times.append(seconds)
+        if len(history) < self.min_samples:
+            return "ok"
+        med = statistics.median(history)
+        mad = statistics.median([abs(t - med) for t in history]) or 1e-9
+        if seconds > max(self.hang_factor * med, med + 20 * mad):
+            self.events.append(("hang", step, seconds, med))
+            return "hang"
+        if seconds > max(self.slow_factor * med, med + 8 * mad):
+            self.events.append(("straggler", step, seconds, med))
+            return "straggler"
+        return "ok"
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self._times) if self._times else 0.0
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False

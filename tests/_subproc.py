@@ -1,0 +1,33 @@
+"""Helper: run a multi-device validation script in a subprocess.
+
+Collective tests need N > 1 devices; the test session itself must keep the
+default single CPU device (per project policy XLA_FLAGS is only set in
+subprocesses / dryrun).  Scripts live in ``tests/device_scripts`` and are
+plain python programs that exit nonzero on failure.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPTS = Path(__file__).parent / "device_scripts"
+REPO_SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_device_script(name: str, devices: int, *args: str,
+                      timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPTS / name), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{name} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,14 @@
+import os
+import sys
+from pathlib import Path
+
+# Make src/ and tests/ importable regardless of invocation directory.
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(Path(__file__).parent))
+
+# Keep the test session single-device (policy: XLA_FLAGS only in
+# subprocesses and launch/dryrun.py). Guard against leakage.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "test session must not force a device count; use tests/_subproc.py"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

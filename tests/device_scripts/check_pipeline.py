@@ -1,0 +1,80 @@
+"""GPipe pipeline over the "pod" axis vs sequential reference (4 stages).
+
+Each stage = 2 residual MLP layers; the pipelined forward over 4
+microbatches must equal applying all 8 layers sequentially.  Also checks
+gradients flow through the pipeline (transposed permutes).
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.pipeline import bubble_fraction, make_pipelined_forward
+
+
+def main():
+    assert jax.device_count() >= 4
+    mesh = jax.make_mesh((4,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    S, L_per, D, H = 4, 2, 16, 32
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (S, L_per, D, H)) * 0.1
+    w2 = jax.random.normal(jax.random.fold_in(key, 1),
+                           (S, L_per, H, D)) * 0.1
+    params = {"w1": w1, "w2": w2}
+
+    def stage_fn(p, x):   # p: {w1: (L_per, D, H), w2: (L_per, H, D)}
+        for i in range(L_per):
+            x = x + jnp.tanh(x @ p["w1"][i]) @ p["w2"][i]
+        return x
+
+    x = jax.random.normal(jax.random.fold_in(key, 2), (8, D))
+
+    # sequential reference
+    ref = x
+    for s in range(S):
+        ref = stage_fn(jax.tree.map(lambda a: a[s], params), ref)
+
+    pipe = make_pipelined_forward(stage_fn, mesh, axis="pod",
+                                  n_microbatches=4, params_spec=P("pod"),
+                                  x_spec=P())
+    pg = jax.device_put(params, NamedSharding(mesh, P("pod")))
+    out = pipe(pg, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    print(f"OK pipeline forward == sequential "
+          f"(4 stages x 4 microbatches, bubble="
+          f"{bubble_fraction(4, 4):.2f})")
+
+    # gradients through the pipeline
+    def loss_pipe(params, x):
+        B = x.shape[0]
+        mbs = x.reshape(4, B // 4, D)
+        from repro.parallel.pipeline import pipeline_apply
+        import functools
+        inner = functools.partial(pipeline_apply, stage_fn, axis="pod",
+                                  n_stages=4)
+        out = jax.shard_map(inner, mesh=mesh, in_specs=(P("pod"), P()),
+                            out_specs=P(), check_vma=False)(params, mbs)
+        return jnp.sum(out ** 2)
+
+    def loss_ref(params, x):
+        y = x
+        for s in range(S):
+            y = stage_fn(jax.tree.map(lambda a: a[s], params), y)
+        return jnp.sum(y ** 2)
+
+    g_pipe = jax.jit(jax.grad(loss_pipe))(pg, x)
+    g_ref = jax.grad(loss_ref)(params, x)
+    for a, b in zip(jax.tree.leaves(g_pipe), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+    print("OK pipeline gradients == sequential gradients")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

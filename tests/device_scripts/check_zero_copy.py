@@ -1,0 +1,76 @@
+"""Structural zero-copy verification (paper §4) on compiled HLO.
+
+Claims checked:
+* natural variant ("TPU-native datatype" formulation): NO local
+  data-movement ops at all — zero transpose/copy/gather in the whole
+  compiled module, and nothing between the component collectives.  This is
+  the paper's "formally zero-copy" property, realized structurally.
+* paper variant (literal column-major composite construction): same
+  collective schedule and byte volume; XLA is *allowed* to keep relayout
+  ops (it does on the CPU backend — the MPI-datatype transliteration is
+  strictly weaker than the natural axis form; recorded as a finding in
+  EXPERIMENTS.md).
+* both variants emit exactly d component collectives with identical
+  collective bytes.
+"""
+
+import math
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cache import cart_create
+from repro.core.factorized import factorized_all_to_all
+from repro.core.hlo_inspect import parse_hlo
+
+
+def compile_report(dims, names, variant, block=64):
+    p = math.prod(dims)
+    mesh = cart_create(p, dims, names)
+    spec = P(tuple(reversed(names)))
+
+    def loc(xl):
+        return factorized_all_to_all(xl[0], names, variant=variant)[None]
+
+    f = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=spec, out_specs=spec))
+    x = jax.ShapeDtypeStruct((p, p, block), jnp.float32)
+    compiled = f.lower(x).compile()
+    return parse_hlo(compiled.as_text())
+
+
+def movement_count(rep):
+    return sum(rep.op_counts.get(k, 0)
+               for k in ("transpose", "copy", "gather"))
+
+
+def main():
+    for dims, names in [((2, 3, 2), ("i", "j", "k")), ((3, 4), ("i", "j"))]:
+        d = len(dims)
+        nat = compile_report(dims, names, "natural")
+        pap = compile_report(dims, names, "paper")
+
+        # Natural variant: formally zero-copy, structurally verified.
+        n_mv = movement_count(nat)
+        assert n_mv == 0, (
+            f"natural variant not zero-copy: "
+            f"{[o.line for o in nat.ops if o.kind in ('transpose','copy','gather')]}")
+        assert not nat.movement_ops_between_collectives()
+        assert len(nat.collective_ops()) == d, (
+            f"expected {d} component collectives, got "
+            f"{len(nat.collective_ops())}")
+
+        # Paper variant: same schedule/volume; report its residual relayouts.
+        assert len(pap.collective_ops()) == d
+        assert nat.collective_bytes() == pap.collective_bytes() > 0
+        p_mv = movement_count(pap)
+        assert n_mv <= p_mv, "natural variant should never move more data"
+        print(f"OK dims={dims}: {d} collectives, zero-copy verified "
+              f"(natural movement-ops=0, paper-literal={p_mv}), "
+              f"coll_bytes={nat.collective_bytes():.0f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Device-free validation of Algorithm 1's index/permutation math.
+
+The simulator models the MPI implementation (flat buffers, derived
+datatypes, double buffering) exactly; these tests pin it to the paper's own
+worked examples and Theorem 1, and property-test correctness over random
+factorizations (hypothesis).
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import (
+    PAPER_EXAMPLES,
+    check_correct,
+    example_index_table,
+    round_datatype,
+    simulate_factorized_alltoall,
+    strides,
+)
+
+
+class TestPaperExamples:
+    @pytest.mark.parametrize("dims", list(PAPER_EXAMPLES))
+    def test_index_tables_match_paper(self, dims):
+        for k, expected in PAPER_EXAMPLES[dims].items():
+            assert example_index_table(dims, k) == expected
+
+    def test_4dim_example_spot_values(self):
+        # 4x3x3x4 = 144 (paper shows ellipses; check all visible values,
+        # correcting the paper's obvious typos: 104->105/106 duplicates).
+        t0 = example_index_table((4, 3, 3, 4), 0)
+        assert t0[0][:4] == [0, 36, 72, 108]
+        assert t0[0][4] == 12
+        assert t0[0][-4:] == [32, 68, 104, 140]
+        assert t0[1][:4] == [1, 37, 73, 109]
+        assert t0[3][:4] == [3, 39, 75, 111]
+        assert t0[3][-4:] == [35, 71, 107, 143]
+        t1 = example_index_table((4, 3, 3, 4), 1)
+        assert t1[0][:8] == [0, 1, 2, 3, 36, 37, 38, 39]
+        assert t1[0][-4:] == [132, 133, 134, 135]
+        assert t1[2][:8] == [8, 9, 10, 11, 44, 45, 46, 47]
+        assert t1[2][-4:] == [140, 141, 142, 143]
+        t2 = example_index_table((4, 3, 3, 4), 2)
+        assert t2[0][:12] == list(range(12))
+        assert t2[0][12] == 36 and t2[0][-3:] == [117, 118, 119]
+        assert t2[2][:12] == list(range(24, 36))
+        t3 = example_index_table((4, 3, 3, 4), 3)
+        assert t3[0] == list(range(36))
+        assert t3[1][:4] == [36, 37, 38, 39]
+        assert t3[3][-3:] == [141, 142, 143]
+
+    def test_last_round_blocks_consecutive(self):
+        # "the blocks for the last round consist of consecutively indexed
+        # elements" — for every factorization.
+        for dims in [(5, 4), (2, 3, 4), (4, 3, 3, 4), (2, 2, 2, 2)]:
+            pos, extent = round_datatype(dims, len(dims) - 1)
+            assert pos == list(range(len(pos)))
+            assert extent == math.prod(dims[:-1])
+
+    def test_round0_full_blocks(self):
+        # Round 0 composites are single blocks strided by sigma(1).
+        pos, extent = round_datatype((5, 4), 0)
+        assert extent == 1 and pos == [0, 5, 10, 15]
+
+
+class TestCorrectness:
+    @pytest.mark.parametrize("dims", [
+        (2,), (5,), (2, 2), (3, 2), (5, 4), (2, 3, 4), (4, 3, 3, 4),
+        (2, 2, 2, 2), (2, 2, 2, 2, 2), (6, 6), (3, 3, 2),
+    ])
+    def test_factorized_equals_direct(self, dims):
+        assert check_correct(dims)
+
+    @given(st.lists(st.integers(2, 5), min_size=1, max_size=4))
+    @settings(max_examples=40, deadline=None)
+    def test_random_factorizations(self, dims):
+        dims = tuple(dims)
+        if math.prod(dims) > 200:
+            dims = dims[:2]
+        assert check_correct(dims)
+
+    @given(st.permutations(list(range(3))))
+    @settings(max_examples=6, deadline=None)
+    def test_round_orders_commute(self, order):
+        assert check_correct((2, 3, 4), tuple(order))
+
+
+class TestTheorem1:
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4), (4, 3, 3, 4),
+                                      (2, 2, 2, 2)])
+    def test_volume_formula(self, dims):
+        _, vol = simulate_factorized_alltoall(dims)
+        d, p = len(dims), math.prod(dims)
+        assert vol.total_blocks_sent == vol.theorem1_formula
+        assert vol.theorem1_formula == d * p - sum(p // Dk for Dk in dims)
+        # per-round count: (D[k]-1) * p / D[k]
+        for k, Dk in enumerate(dims):
+            assert vol.blocks_sent_per_round[k] == (Dk - 1) * (p // Dk)
+
+    def test_hypercube_case(self):
+        # p = 2^d: log2(p) rounds, each sending p/2 blocks (hypercube algo).
+        _, vol = simulate_factorized_alltoall((2, 2, 2, 2))
+        assert all(n == 8 for n in vol.blocks_sent_per_round)
+        assert vol.total_blocks_sent == 4 * 16 - 4 * 8 == 32
+
+    def test_datatype_partition_property(self):
+        # Each round's instances partition all p block offsets.
+        for dims in [(5, 4), (2, 3, 4), (4, 3, 3, 4)]:
+            p = math.prod(dims)
+            for k in range(len(dims)):
+                pos, extent = round_datatype(dims, k)
+                all_offsets = sorted(q + j * extent
+                                     for j in range(dims[k]) for q in pos)
+                assert all_offsets == list(range(p))

@@ -1,0 +1,97 @@
+"""Loop-aware HLO analysis: exactness on known programs (single device)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hlo_inspect import (collective_group_stride,
+                                    loop_aware_analysis)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+class TestLoopAwareFlops:
+    def test_scan_flops_exact(self):
+        def body(c, x):
+            return c @ x, jnp.sum(c)
+
+        def f(c, xs):
+            return jax.lax.scan(body, c, xs)
+
+        text = _compile(f, jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                        jax.ShapeDtypeStruct((9, 32, 32), jnp.float32))
+        res = loop_aware_analysis(text)
+        assert res["flops"] == 2 * 32 * 32 * 32 * 9
+
+    def test_nested_scan_flops_exact(self):
+        def inner(c, x):
+            return c @ x, None
+
+        def f(c, xs):
+            def ob(c, _):
+                c2, _ = jax.lax.scan(inner, c, xs)
+                return c2, None
+            return jax.lax.scan(ob, c, None, length=5)[0]
+
+        text = _compile(f, jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                        jax.ShapeDtypeStruct((3, 16, 16), jnp.float32))
+        res = loop_aware_analysis(text)
+        assert res["flops"] == 2 * 16 ** 3 * 3 * 5
+
+    def test_no_loop_matches_plain(self):
+        def f(a, b):
+            return a @ b
+
+        text = _compile(f, jax.ShapeDtypeStruct((8, 64), jnp.float32),
+                        jax.ShapeDtypeStruct((64, 8), jnp.float32))
+        res = loop_aware_analysis(text)
+        assert res["flops"] == 2 * 8 * 64 * 8
+
+    def test_bytes_scale_with_trip_count(self):
+        def f(c, xs):
+            def body(c, x):
+                return c + x * 2.0, None
+            return jax.lax.scan(body, c, xs)[0]
+
+        t3 = _compile(f, jax.ShapeDtypeStruct((1024,), jnp.float32),
+                      jax.ShapeDtypeStruct((3, 1024), jnp.float32))
+        t30 = _compile(f, jax.ShapeDtypeStruct((1024,), jnp.float32),
+                       jax.ShapeDtypeStruct((30, 1024), jnp.float32))
+        b3 = loop_aware_analysis(t3)["bytes_proxy"]
+        b30 = loop_aware_analysis(t30)["bytes_proxy"]
+        assert 5 < b30 / b3 < 15   # ~10x more loop traffic
+
+    def test_dynamic_slice_counts_slice_not_operand(self):
+        # scanning over a big stacked array must charge the slice, not
+        # the whole stack, per iteration
+        def f(xs):
+            def body(c, i):
+                return c + jax.lax.dynamic_index_in_dim(
+                    xs, i, keepdims=False).sum(), None
+            return jax.lax.scan(body, 0.0, jnp.arange(8))[0]
+
+        text = _compile(f, jax.ShapeDtypeStruct((8, 4096), jnp.float32))
+        res = loop_aware_analysis(text)
+        total = 8 * 4096 * 4
+        # full-stack-per-iteration would be >= 8x total (1.05 MB); the
+        # slice-correct accounting lands ~5x (entry copies + slice reads
+        # + reduction intermediates)
+        assert total < res["bytes_proxy"] < 6.5 * total
+
+
+class TestGroupStride:
+    @pytest.mark.parametrize("line,expect", [
+        ("%a = f32[4]{0} all-reduce(%x), replica_groups={{0,16,32,48}}, "
+         "to_apply=%add", (4, 16)),
+        ("%a = f32[4]{0} all-reduce(%x), replica_groups={{0,1},{2,3}}",
+         (2, 1)),
+    ])
+    def test_explicit_groups(self, line, expect):
+        assert collective_group_stride(line) == expect
+
+    def test_iota_groups(self):
+        line = ("%a = f32[4] all-to-all(%x), "
+                "replica_groups=[4,4]<=[16]")
+        assert collective_group_stride(line) == (4, 1)

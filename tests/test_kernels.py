@@ -1,0 +1,191 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import round_datatype
+from repro.kernels.block_reorder import datatype_pack, datatype_unpack
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import grouped_matmul
+from repro.kernels.ref import (ref_attention, ref_block_reorder, ref_gmm)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,S,Dh", [
+        (1, 2, 2, 64, 32), (2, 4, 2, 32, 16), (1, 4, 1, 64, 32),
+        (1, 8, 8, 128, 64), (2, 6, 3, 48, 64),
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, B, Hq, Hkv, S, Dh, causal):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Hq, S, Dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Hkv, S, Dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Hkv, S, Dh), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, block_q=16,
+                              block_k=16, interpret=True)
+        ref = ref_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    @pytest.mark.parametrize("window", [1, 8, 16, 64])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 64, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 64, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 64, 32), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=16, block_k=16, interpret=True)
+        ref = ref_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 4, 32, 32)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, 2, 32, 32)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, 2, 32, 32)).astype(dtype)
+        out = flash_attention(q, k, v, block_q=16, block_k=16,
+                              interpret=True)
+        ref = ref_attention(q, k, v)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   ref.astype(jnp.float32), **_tol(dtype))
+
+    def test_kv_offset_decode(self):
+        # One new query against a longer KV prefix (decode step semantics).
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 8, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 64, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 64, 32), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, kv_offset=56,
+                              block_q=8, block_k=16, interpret=True)
+        ref = ref_attention(q, k, v, causal=True, kv_offset=56)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    @given(st.sampled_from([16, 32, 48, 64]), st.sampled_from([8, 16, 32]),
+           st.booleans())
+    @settings(max_examples=10, deadline=None)
+    def test_block_size_invariance(self, S, blk, causal):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, S, 16), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, S, 16), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, S, 16), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, block_q=blk,
+                              block_k=blk, interpret=True)
+        ref = ref_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+
+class TestFlashAttentionBackward:
+    @pytest.mark.parametrize("B,Hq,Hkv,S,Dh,causal,window", [
+        (1, 2, 2, 32, 16, True, None),
+        (2, 4, 2, 32, 16, True, None),
+        (1, 4, 1, 32, 16, False, None),
+        (1, 2, 2, 48, 16, True, 8),
+        (1, 8, 2, 64, 32, True, None),
+    ])
+    def test_grads_match_autodiff(self, B, Hq, Hkv, S, Dh, causal, window):
+        from repro.kernels.flash_attention_bwd import (
+            flash_attention_fwd, flash_attention_trainable)
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (B, Hq, S, Dh))
+        k = jax.random.normal(ks[1], (B, Hkv, S, Dh))
+        v = jax.random.normal(ks[2], (B, Hkv, S, Dh))
+        dout = jax.random.normal(ks[3], (B, Hq, S, Dh))
+
+        out, lse = flash_attention_fwd(q, k, v, causal=causal,
+                                       window=window, block_q=16,
+                                       block_k=16, interpret=True)
+        np.testing.assert_allclose(
+            out, ref_attention(q, k, v, causal=causal, window=window),
+            rtol=2e-5, atol=2e-5)
+
+        def f_ref(q, k, v):
+            return jnp.sum(ref_attention(q, k, v, causal=causal,
+                                         window=window) * dout)
+
+        def f_pal(q, k, v):
+            return jnp.sum(flash_attention_trainable(
+                q, k, v, causal=causal, window=window, block_q=16,
+                block_k=16, interpret=True) * dout)
+
+        g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        g_pal = jax.grad(f_pal, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g_pal, g_ref):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+class TestBlockReorder:
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4), (4, 3, 3, 4),
+                                      (2, 2, 2, 2), (6,), (3, 2)])
+    def test_pack_matches_datatype(self, dims):
+        p = math.prod(dims)
+        x = jnp.arange(p * 5, dtype=jnp.float32).reshape(p, 5)
+        for k in range(len(dims)):
+            pos, extent = round_datatype(dims, k)
+            ref = ref_block_reorder(x, pos, extent, dims[k])
+            got = datatype_pack(x, dims=dims, k=k, interpret=True)
+            np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4), (4, 3, 3, 4)])
+    def test_unpack_inverts_pack(self, dims):
+        p = math.prod(dims)
+        x = jax.random.normal(KEY, (p, 9))
+        for k in range(len(dims)):
+            y = datatype_pack(x, dims=dims, k=k, interpret=True)
+            back = datatype_unpack(y, dims=dims, k=k, interpret=True)
+            np.testing.assert_array_equal(back, x)
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.int32])
+    def test_dtypes(self, dtype):
+        dims = (2, 3, 4)
+        p = math.prod(dims)
+        x = jnp.arange(p * 4).reshape(p, 4).astype(dtype)
+        y = datatype_pack(x, dims=dims, k=1, interpret=True)
+        pos, extent = round_datatype(dims, 1)
+        np.testing.assert_array_equal(
+            y, ref_block_reorder(x, pos, extent, dims[1]))
+
+
+class TestGroupedMatmul:
+    @pytest.mark.parametrize("E,C,K,N", [
+        (4, 16, 32, 24), (2, 128, 64, 128), (8, 8, 8, 8), (1, 256, 128, 64),
+        (16, 4, 12, 20),
+    ])
+    def test_matches_einsum(self, E, C, K, N):
+        a = jax.random.normal(KEY, (E, C, K), jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(KEY, 1), (E, K, N),
+                              jnp.float32)
+        got = grouped_matmul(a, b, block_c=32, block_n=32, block_k=16,
+                             interpret=True)
+        np.testing.assert_allclose(got, ref_gmm(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_bf16(self):
+        a = jax.random.normal(KEY, (2, 32, 32), jnp.float32).astype(jnp.bfloat16)
+        b = jax.random.normal(KEY, (2, 32, 16), jnp.float32).astype(jnp.bfloat16)
+        got = grouped_matmul(a, b, block_c=16, block_n=16, block_k=16,
+                             interpret=True)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), ref_gmm(a, b).astype(jnp.float32),
+            rtol=3e-2, atol=3e-2)
+
+    @given(st.integers(1, 6), st.sampled_from([8, 16, 64]),
+           st.sampled_from([8, 32]), st.sampled_from([8, 24]))
+    @settings(max_examples=10, deadline=None)
+    def test_property_shapes(self, E, C, K, N):
+        a = jax.random.normal(KEY, (E, C, K), jnp.float32)
+        b = jax.random.normal(KEY, (E, K, N), jnp.float32)
+        got = grouped_matmul(a, b, block_c=8, block_n=8, block_k=8,
+                             interpret=True)
+        np.testing.assert_allclose(got, ref_gmm(a, b), rtol=1e-5, atol=1e-5)

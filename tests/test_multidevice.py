@@ -1,0 +1,57 @@
+"""Multi-device (subprocess) integration tests for the JAX collectives.
+
+The pytest session keeps the default single CPU device; collective checks
+run in subprocesses with ``--xla_force_host_platform_device_count``.
+"""
+
+import pytest
+
+from _subproc import run_device_script
+
+
+@pytest.mark.slow
+def test_factorized_all_to_all_12dev():
+    out = run_device_script("check_factorized.py", devices=12)
+    assert "OK tiled" in out
+
+
+@pytest.mark.slow
+def test_zero_copy_hlo():
+    out = run_device_script("check_zero_copy.py", devices=12)
+    assert "zero-copy verified" in out
+
+
+@pytest.mark.slow
+def test_moe_expert_parallel():
+    out = run_device_script("check_moe_ep.py", devices=8)
+    assert "replicated" in out and "partitioned" in out
+
+
+@pytest.mark.slow
+def test_ulysses_sequence_parallel():
+    out = run_device_script("check_ulysses.py", devices=8)
+    assert out.count("OK Ulysses") == 4
+
+
+@pytest.mark.slow
+def test_compressed_psum():
+    out = run_device_script("check_compression.py", devices=8)
+    assert "OK compressed" in out
+
+
+@pytest.mark.slow
+def test_elastic_restore():
+    out = run_device_script("check_elastic.py", devices=8)
+    assert "OK elastic" in out
+
+
+@pytest.mark.slow
+def test_pipeline_parallel():
+    out = run_device_script("check_pipeline.py", devices=4)
+    assert "pipeline gradients == sequential" in out
+
+
+@pytest.mark.slow
+def test_ring_attention():
+    out = run_device_script("check_ring_attention.py", devices=8)
+    assert out.count("OK ring attention") == 4
