@@ -5,7 +5,11 @@ Protocol mirrors the paper: element counts in deciles 1..10000 of int32
 ("MPI_INT") per process pair, 8 warmup + 40 measured repetitions,
 best-of (completion time of the slowest process ~ host wall time here),
 barrier via ``block_until_ready``.  p = 16 virtual CPU devices;
-factorizations d=1 (direct), 2, 3, 4 = ceil(log2 p) from dims_create.
+factorizations d=1 (direct), 2, 3, 4 = ceil(log2 p) from dims_create,
+plus the chunk-pipelined ``overlap[d=2]`` schedule (core.overlap) — on
+the CPU harness overlap carries correctness-priced overhead only and
+should sit within noise of ``factorized[d=2]``; the link-level win needs
+multi-ported hardware (see tuning.predict_overlapped).
 
 This is the CPU-backend *measured* analogue; the TPU-regime predictions
 come from the tuning model and the roofline artifacts.  Run via:
@@ -51,14 +55,15 @@ def main():
               file=sys.stderr)
         return 1
     rows = []
-    variants = [("direct", (P_PROCS,))]
+    variants = [("direct", (P_PROCS,), "direct")]
     for d in (2, 3, 4):
-        variants.append((f"factorized[d={d}]", dims_create(P_PROCS, d)))
+        variants.append((f"factorized[d={d}]", dims_create(P_PROCS, d),
+                         "factorized"))
+    variants.append(("overlap[d=2]", dims_create(P_PROCS, 2), "overlap"))
 
-    for impl, dims in variants:
+    for impl, dims, backend in variants:
         names = tuple(f"t{i}" for i in range(len(dims)))
         mesh = cart_create(P_PROCS, tuple(reversed(dims)), names)
-        backend = "direct" if impl == "direct" else "factorized"
         fn = host_alltoall(mesh, names, backend=backend)
         for nelem in ELEMENTS:
             x = jnp.ones((P_PROCS, P_PROCS, nelem), jnp.int32)

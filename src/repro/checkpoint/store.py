@@ -28,7 +28,49 @@ from pathlib import Path
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+import zlib as _zlib
+
+try:
+    import zstandard as zstd
+    _HAVE_ZSTD = True
+except ImportError:          # gate the optional dep: stdlib zlib fallback
+    _HAVE_ZSTD = False
+
+    class _Compressor:
+        def __init__(self, level=3):
+            self._level = level
+
+        def compress(self, data):
+            return _zlib.compress(data, self._level)
+
+    class _Decompressor:
+        @staticmethod
+        def decompress(data):
+            return _zlib.decompress(data)
+
+    class zstd:  # noqa: N801 - mimics the zstandard module surface
+        ZstdCompressor = _Compressor
+        ZstdDecompressor = _Decompressor
+
+
+# Saves record their codec in the manifest so a checkpoint written where
+# zstandard is absent restores anywhere (and vice versa); legacy manifests
+# without the field are sniffed by the zstd frame magic.
+_CODEC = "zstd" if _HAVE_ZSTD else "zlib"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _decompress(data: bytes, codec: str | None) -> bytes:
+    if codec is None:
+        codec = "zstd" if data[:4] == _ZSTD_MAGIC else "zlib"
+    if codec == "zstd":
+        if not _HAVE_ZSTD:
+            raise ModuleNotFoundError(
+                "checkpoint leaves are zstd-compressed; install zstandard "
+                "to restore them here")
+        return zstd.ZstdDecompressor().decompress(data)
+    return _zlib.decompress(data)
 
 
 def _tree_to_entries(tree):
@@ -61,7 +103,8 @@ def save_checkpoint(directory, step: int, tree, extra: dict | None = None,
 
     entries, _ = _tree_to_entries(tree)
     cctx = zstd.ZstdCompressor(level=3)
-    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    manifest = {"step": step, "extra": extra or {}, "codec": _CODEC,
+                "leaves": {}}
     for i, (key, leaf) in enumerate(entries):
         arr = np.asarray(jax.device_get(leaf))
         raw = arr.tobytes()
@@ -125,14 +168,14 @@ def restore_checkpoint(directory, step: int | None, target_tree,
     sh_list = None
     if shardings is not None:
         sh_list = [s for _, s in _tree_to_entries(shardings)[0]]
-    dctx = zstd.ZstdDecompressor()
+    codec = manifest.get("codec")
     leaves = []
     for i, (key, ref) in enumerate(entries):
         info = manifest["leaves"].get(key)
         if info is None:
             raise KeyError(f"checkpoint at step {step} missing leaf {key}")
         with open(base / info["file"], "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = _decompress(f.read(), codec)
         if verify:
             digest = hashlib.sha256(raw).hexdigest()
             if digest != info["sha256"]:

@@ -1,0 +1,100 @@
+"""JAX version compatibility shims.
+
+The codebase targets the modern JAX API surface (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``, ``jax.make_mesh(axis_types=...)``).
+On older runtimes (e.g. 0.4.x, where ``shard_map`` still lives in
+``jax.experimental`` and takes ``check_rep``) this module installs
+equivalent aliases at import time so the rest of the package is written
+against one API.  Imported for its side effects from ``repro.__init__``;
+every shim is a no-op when the runtime already provides the modern name.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+    from jax._src import core as _core
+
+    def axis_size(axis_name) -> int:
+        names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+        size = 1
+        for n in names:
+            size *= _core.axis_frame(n)   # returns the int size on 0.4.x
+        return size
+
+    jax.lax.axis_size = axis_size
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    if not hasattr(jax, "make_mesh"):
+        import math
+
+        import numpy as np
+        from jax.sharding import Mesh
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            devs = list(devices) if devices is not None else jax.devices()
+            n = math.prod(axis_shapes)
+            arr = np.array(devs[:n], dtype=object).reshape(axis_shapes)
+            return Mesh(arr, tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+        return
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params:
+        return
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        # old runtimes have no axis-type concept: every axis behaves as
+        # Auto, which is what the callers request
+        return _make_mesh(axis_shapes, axis_names, *args, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_axis_size()
+    _install_axis_type()
+    _install_make_mesh()
+
+
+install()

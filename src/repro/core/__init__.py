@@ -33,11 +33,19 @@ from .tuning import (
     LinkModel,
     Schedule,
     choose_algorithm,
+    choose_chunks,
     crossover_block_bytes,
+    predict_overlapped,
 )
 from .guidelines import Measurement, Violation, check_guidelines, format_report
-from .hlo_inspect import collective_bytes_of, parse_hlo
-from .pipelined import choose_chunks, pipelined_all_to_all
+from .hlo_inspect import collective_bytes_of, interleave_report, parse_hlo
+from .overlap import (
+    overlapped_all_to_all,
+    overlapped_all_to_all_tiled,
+    pipeline_order,
+    pipelined_all_to_all,
+    run_pipelined,
+)
 
 __all__ = [
     "DCN", "ICI", "LinkModel", "Measurement", "PAPER_EXAMPLES", "Schedule",
@@ -46,7 +54,10 @@ __all__ = [
     "collective_bytes_of", "crossover_block_bytes", "dims_create",
     "direct_all_to_all", "direct_all_to_all_tiled", "example_index_table",
     "factorized_all_to_all", "factorized_all_to_all_tiled", "format_report",
-    "free", "get_factorization", "host_alltoall", "max_dims", "parse_hlo",
-    "pipelined_all_to_all", "prime_factorization", "round_datatype",
-    "simulate_direct_alltoall", "simulate_factorized_alltoall",
+    "free", "get_factorization", "host_alltoall", "interleave_report",
+    "max_dims", "overlapped_all_to_all", "overlapped_all_to_all_tiled",
+    "parse_hlo", "pipeline_order", "pipelined_all_to_all",
+    "predict_overlapped", "prime_factorization", "round_datatype",
+    "run_pipelined", "simulate_direct_alltoall",
+    "simulate_factorized_alltoall",
 ]

@@ -94,6 +94,18 @@ _REGISTRY: dict[tuple, tuple[Mesh | None, TorusFactorization]] = {}
 _SPLIT_COUNTER = {"cart_creates": 0, "lookups": 0}
 
 
+def device_fingerprint(mesh: Mesh) -> tuple:
+    """Stable identity of the mesh's device set.
+
+    Uses the runtime-assigned ``device.id`` (stable for a given process
+    topology) and platform, NOT ``id(device)`` — CPython object identity
+    changes whenever the device list is rebuilt, which silently defeated
+    the cache across descriptor re-lookups through fresh ``Mesh`` objects.
+    """
+    devs = mesh.devices.flat
+    return tuple((int(d.id), getattr(d, "platform", "?")) for d in devs)
+
+
 def _key(devices_fingerprint, dims, names, variant):
     return (devices_fingerprint, tuple(dims), tuple(names or ()), variant)
 
@@ -117,9 +129,7 @@ def get_factorization(mesh: Mesh, axis_names=None, *, d: int | None = None,
             raise ValueError("need either axis_names or d")
         dims = tuple(reversed(dims_create(p, d)))  # fastest digit smallest
         axis_names = tuple(f"t{i}" for i in range(d))
-    fingerprint = tuple(id(dev) for dev in mesh.devices.flat[:1]) \
-        + (mesh.devices.size,)
-    key = _key(fingerprint, dims, axis_names, variant)
+    key = _key(device_fingerprint(mesh), dims, axis_names, variant)
     _SPLIT_COUNTER["lookups"] += 1
     if key not in _REGISTRY:
         _SPLIT_COUNTER["cart_creates"] += 1

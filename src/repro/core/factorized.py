@@ -181,12 +181,14 @@ def direct_all_to_all_tiled(x, axis_names, split_axis, concat_axis):
 
 
 def host_alltoall(mesh: Mesh, axis_names, *, variant: Variant = "natural",
-                  round_order=None, backend="factorized"):
+                  round_order=None, backend="factorized", n_chunks: int = 2):
     """Host-level jitted all-to-all over a global ``(p, p, *block)`` operand.
 
     ``x[r, i]`` is rank r's block for rank i; result ``y[r, i]`` is the
     block rank r received from rank i.  The rank axis is sharded over the
     torus axes (most significant digit first, matching the convention).
+    ``backend``: "factorized" | "direct" | "overlap" (chunk-pipelined
+    rounds, ``n_chunks`` payload chunks; see ``core.overlap``).
     """
     axis_names = _as_tuple(axis_names)
     spec = P(tuple(reversed(axis_names)))
@@ -198,6 +200,11 @@ def host_alltoall(mesh: Mesh, axis_names, *, variant: Variant = "natural",
                                         round_order=round_order)
         elif backend == "direct":
             out = direct_all_to_all(blocks, axis_names)
+        elif backend in ("overlap", "pipelined"):
+            from .overlap import overlapped_all_to_all
+            out = overlapped_all_to_all(blocks, axis_names,
+                                        n_chunks=n_chunks, variant=variant,
+                                        round_order=round_order)
         else:
             raise ValueError(backend)
         return out[None]

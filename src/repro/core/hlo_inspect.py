@@ -118,6 +118,78 @@ class HloReport:
                 if o.kind in bad_kinds and o.result_bytes > 0]
 
 
+@dataclass
+class InterleaveReport:
+    """Program-order interleaving of collectives and compute stages.
+
+    Built for verifying the overlap engine (``core.overlap``): a program
+    that pipelines per-dimension rounds against per-chunk compute emits
+    collectives *between* the compute stages of consecutive chunks, while
+    the strictly sequential communicate->compute->communicate program has
+    exactly one collective run before and one after its compute block.
+
+    ``events`` is the lowered program filtered to collective / compute
+    ops, in emission order.
+    """
+    events: list[tuple[str, str]] = field(default_factory=list)  # (cls, op)
+
+    @property
+    def runs(self) -> list[tuple[str, int]]:
+        """Run-length encoding of the event classes."""
+        out: list[tuple[str, int]] = []
+        for cls, _ in self.events:
+            if out and out[-1][0] == cls:
+                out[-1] = (cls, out[-1][1] + 1)
+            else:
+                out.append((cls, 1))
+        return out
+
+    @property
+    def collective_runs(self) -> int:
+        """Maximal collective runs separated by compute.  Sequential
+        comm->compute->comm programs have <= 2; a pipelined program has
+        one extra run per interleaved chunk boundary."""
+        return sum(1 for cls, _ in self.runs if cls == "collective")
+
+    @property
+    def interleaved_collectives(self) -> int:
+        """Collectives with a compute stage both before AND after them in
+        program order — the rounds the schedule can hide behind compute."""
+        classes = [cls for cls, _ in self.events]
+        try:
+            first = classes.index("compute")
+            last = len(classes) - 1 - classes[::-1].index("compute")
+        except ValueError:
+            return 0
+        return sum(1 for cls in classes[first + 1:last]
+                   if cls == "collective")
+
+
+def interleave_report(text: str,
+                      compute_kinds: tuple[str, ...] = ("dot",),
+                      collective_kind: str | None = "all-to-all") \
+        -> InterleaveReport:
+    """Classify the program's ops into collectives vs compute, in order.
+
+    Use the *unoptimized* HLO (``lowered.as_text(dialect="hlo")``): there
+    program order is trace order, so the report verifies exactly what the
+    overlap engine emitted.  ``collective_kind`` restricts to one
+    collective family (default ``all-to-all`` — the per-dimension rounds);
+    pass ``None`` to count every collective.
+    """
+    rep = InterleaveReport()
+    for op in parse_hlo(text).ops:
+        base = op.kind.removesuffix("-start")
+        if op.kind.endswith("-done"):
+            continue
+        if base in COLLECTIVE_KINDS and (collective_kind is None
+                                         or base == collective_kind):
+            rep.events.append(("collective", op.name))
+        elif op.kind in compute_kinds:
+            rep.events.append(("compute", op.name))
+    return rep
+
+
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
     r"([a-z][a-z0-9\-]*)\(")
@@ -276,11 +348,17 @@ def _comp_dot_flops(comp: _Comp) -> float:
         cm = _CONTRACT_RE.search(line)
         contract = [int(t) for t in cm.group(1).split(",")] \
             if cm and cm.group(1) else []
-        # first operand ref after "dot("
-        oper = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+        # first operand ref after "dot(" — some XLA versions print typed
+        # operands, e.g. ``dot(f32[8,64]{1,0} %Arg_0.1, ...)``, so prefer
+        # %-prefixed refs and fall back to the first bare token
+        args_m = re.search(r"dot\(([^)]*)", line)
+        refs = re.findall(r"%([\w.\-]+)", args_m.group(1)) if args_m else []
+        if not refs:
+            bare = re.search(r"dot\(\s*([\w.\-]+)", line)
+            refs = [bare.group(1)] if bare else []
         k = 1
-        if oper:
-            lhs_shape = comp.symbol(oper.group(1))
+        if refs:
+            lhs_shape = comp.symbol(refs[0])
             if lhs_shape:
                 dims = _shape_dims(lhs_shape)
                 for c in contract:

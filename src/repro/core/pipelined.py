@@ -1,96 +1,33 @@
-"""Beyond-paper optimization: software-pipelined factorized all-to-all.
+"""Software-pipelined factorized all-to-all — compatibility facade.
 
-The paper's rounds are strictly sequential: round k+1 cannot start until
-round k's collective has fully completed, because the composite blocks of
-round k+1 contain data received in round k.  On a one-ported network this
-is optimal.  TPU ICI is *multi-ported*: each torus dimension has its own
-links, and XLA's async collectives (``all-to-all-start``/``-done``) let
-independent collectives overlap.
+The chunk-interleaved scheduler that used to live here has been absorbed
+into the general overlap engine (``core.overlap``), which adds arbitrary
+``round_order``, per-chunk compute stages, reverse (combine) rounds, and
+tiled semantics.  ``pipelined_all_to_all`` remains the no-compute-stage
+specialization and is re-exported here unchanged for existing callers.
 
-We therefore split the block payload into ``n_chunks`` independent chunks
-and interleave the per-chunk round schedules round-robin:
-
-    chunk0.round0; chunk1.round0; chunk0.round1; chunk1.round1; ...
-
-Chunk c's round k+1 depends only on chunk c's round k, so chunk c+1's
-round k can run concurrently with chunk c's round k+1 — on a d-dim torus
-these use *different dimension links*, giving up to d-fold link-level
-overlap the paper's formulation leaves idle.  Emitting the collectives in
-this interleaved program order lets XLA's latency-hiding scheduler form
-the overlap; correctness is independent of scheduling.
-
-Cost model: perfect overlap divides the bandwidth term by ~min(d, chunks)
-while adding (chunks-1) extra per-round latencies — profitable for large
-payloads, counterproductive for tiny ones (`choose_chunks`).
+``choose_chunks`` now delegates to the tuning model's
+``predict_overlapped``, which prices the factorized bandwidth term
+``(D_k - 1) * (p / D_k) * block_bytes`` per round — consistent with
+``tuning.predict_factorized`` — instead of the direct-algorithm
+``(p - 1) * block_bytes`` the old local model used.
 """
 
 from __future__ import annotations
 
-import math
-
-import jax.numpy as jnp
-
-from .factorized import factorized_all_to_all, _as_tuple, _axis_sizes
+from .dims import dims_create
+from .overlap import overlapped_all_to_all, pipelined_all_to_all
 from .tuning import LinkModel
+from .tuning import choose_chunks as _choose_chunks
 
-
-def pipelined_all_to_all(x, axis_names, *, n_chunks: int = 2,
-                         variant: str = "natural"):
-    """Chunked-and-interleaved factorized all-to-all.
-
-    ``x``: ``(p, *block)``; the block payload (trailing axes, flattened) is
-    split into ``n_chunks`` equal chunks.  Interleaves the d rounds of the
-    per-chunk schedules so independent collectives are adjacent in program
-    order.  Result identical to ``factorized_all_to_all``.
-    """
-    axis_names = _as_tuple(axis_names)
-    dims = _axis_sizes(axis_names)
-    d = len([s for s in dims if s > 1])
-    p = math.prod(dims)
-    if x.shape[0] != p:
-        raise ValueError(f"leading dim {x.shape[0]} != p={p}")
-    payload = math.prod(x.shape[1:]) if x.ndim > 1 else 1
-    n_chunks = max(1, min(n_chunks, payload))
-    while payload % n_chunks:
-        n_chunks -= 1
-    if n_chunks == 1 or d <= 1:
-        return factorized_all_to_all(x, axis_names, variant=variant)
-
-    flat = x.reshape(p, payload)
-    chunks = [flat[:, i * (payload // n_chunks):(i + 1) * (payload // n_chunks)]
-              for i in range(n_chunks)]
-    # Interleave: emit chunk c's round k right after chunk c-1's round k.
-    # We realize this by running the full per-chunk schedule but relying on
-    # program-order interleaving of the emitted collectives: build each
-    # chunk's rounds lazily, advancing all chunks one round at a time.
-    states = chunks
-    # Reuse the internal round structure by calling the single-round helper.
-    from . import factorized as _f
-    views = []
-    block_shapes = [(payload // n_chunks,)] * n_chunks
-    names, sizes = _f._skip_trivial(axis_names, dims)
-    for c in range(n_chunks):
-        views.append(states[c].reshape(tuple(reversed(sizes))
-                                       + block_shapes[c]))
-    import jax.lax as lax
-    for k in range(len(sizes)):
-        ax = len(sizes) - 1 - k
-        for c in range(n_chunks):
-            views[c] = lax.all_to_all(views[c], names[k], split_axis=ax,
-                                      concat_axis=ax, tiled=False)
-    outs = [v.reshape(p, payload // n_chunks) for v in views]
-    out = jnp.concatenate(outs, axis=1)
-    return out.reshape(x.shape)
+__all__ = ["choose_chunks", "overlapped_all_to_all", "pipelined_all_to_all"]
 
 
 def choose_chunks(p: int, d: int, block_bytes: float,
                   link: LinkModel, max_chunks: int = 4) -> int:
-    """Pick n_chunks minimizing the overlapped alpha-beta estimate."""
-    best_n, best_t = 1, float("inf")
-    for n in range(1, max_chunks + 1):
-        bw_term = (p - 1) * block_bytes / link.bandwidth
-        overlap = min(d, n)
-        t = (d + n - 1) * link.alpha + d * bw_term / overlap
-        if t < best_t:
-            best_n, best_t = n, t
-    return best_n
+    """Pick n_chunks minimizing the overlapped alpha-beta estimate for a
+    uniform-link d-way factorization of ``p`` (legacy signature; see
+    ``tuning.choose_chunks`` for the per-axis form)."""
+    dims = dims_create(p, d)
+    return _choose_chunks(dims, (link,) * len(dims), block_bytes,
+                          max_chunks=max_chunks)

@@ -24,7 +24,6 @@ axes plus dims_create splits) and returns the predicted-optimal schedule.
 
 from __future__ import annotations
 
-import itertools
 import math
 from dataclasses import dataclass, field
 
@@ -47,10 +46,11 @@ DCN = LinkModel(alpha=25e-6, bandwidth=6.4e9)
 @dataclass(frozen=True)
 class Schedule:
     """A concrete algorithm choice for one all-to-all call."""
-    kind: str                      # "direct" | "factorized"
+    kind: str                      # "direct" | "factorized" | "overlap"
     dims: tuple[int, ...]          # factor per round (fastest digit first)
     links: tuple[LinkModel, ...]   # link model per round
     predicted_seconds: float
+    n_chunks: int = 1              # payload chunks (overlap engine)
 
     @property
     def d(self) -> int:
@@ -79,6 +79,58 @@ def predict_direct(p: int, block_bytes: float, link: LinkModel) -> float:
     return (p - 1) * (link.alpha + block_bytes / link.bandwidth)
 
 
+def predict_overlapped(dims, links, block_bytes: float, p: int,
+                       n_chunks: int, compute_seconds: float = 0.0) -> float:
+    """Alpha-beta prediction for the chunked, software-pipelined schedule
+    (``core.overlap``).
+
+    Splitting the block payload into ``n`` chunks and interleaving the
+    per-chunk round schedules lets rounds of different chunks run on
+    *different dimension links* concurrently: in steady state the
+    bandwidth term is divided by the achievable concurrency
+    ``min(d, n)``.  The price is the pipeline fill/drain — each round's
+    per-peer latency is paid ``(d + n - 1)/d`` times over the schedule —
+    so the latency term *grows monotonically* in ``n`` while the
+    bandwidth term shrinks, reproducing the small-vs-large payload
+    crossover the paper observes for direct-vs-factorized one level up.
+
+    ``compute_seconds`` models an interleaved per-chunk compute stage
+    (MoE expert FFN, Ulysses attention): with ``n`` chunks all but the
+    fill fraction ``1/n`` of the cheaper of {communication, compute}
+    hides behind the other.
+
+    At ``n_chunks=1`` (and ``compute_seconds=0``) this is exactly
+    ``predict_factorized``.
+    """
+    active = [(Dk, l) for Dk, l in zip(dims, links) if Dk > 1]
+    d = len(active)
+    if d == 0:
+        return compute_seconds
+    lat = sum((Dk - 1) * l.alpha for Dk, l in active)
+    bw = sum((Dk - 1) * (p // Dk) * block_bytes / l.bandwidth
+             for Dk, l in active)
+    n = max(1, int(n_chunks))
+    if n == 1:
+        return lat + bw + compute_seconds
+    fill = (d + n - 1) / d
+    t_comm = fill * lat + bw / min(d, n)
+    return max(t_comm, compute_seconds) \
+        + min(t_comm, compute_seconds) / n
+
+
+def choose_chunks(dims, links, block_bytes: float, *, max_chunks: int = 8,
+                  compute_seconds: float = 0.0) -> int:
+    """Chunk count minimizing ``predict_overlapped`` (1 = don't pipeline)."""
+    p = math.prod(dims)
+    best_n, best_t = 1, float("inf")
+    for n in range(1, max(1, max_chunks) + 1):
+        t = predict_overlapped(dims, links, block_bytes, p, n,
+                               compute_seconds)
+        if t < best_t:
+            best_n, best_t = n, t
+    return best_n
+
+
 def candidate_factorizations(p: int, max_d: int | None = None):
     """dims_create splits for d = 1..ceil(log2 p) (paper's sweep), plus the
     full prime factorization."""
@@ -96,25 +148,39 @@ def candidate_factorizations(p: int, max_d: int | None = None):
 
 def choose_algorithm(axis_dims: tuple[int, ...],
                      axis_links: tuple[LinkModel, ...],
-                     block_bytes: float) -> Schedule:
-    """Pick direct vs factorized (and round order) for a mesh-axis product.
+                     block_bytes: float, *, max_chunks: int = 1,
+                     compute_seconds: float = 0.0) -> Schedule:
+    """Pick direct vs factorized vs overlapped for a mesh-axis product.
 
     ``axis_dims``/``axis_links`` describe the physical torus axes the
     all-to-all spans (fastest digit first).  Candidates: the direct
-    single collective (bounded by the slowest link) and every round-order
-    permutation of the axis-wise factorization.
+    single collective (bounded by the slowest link), the axis-wise
+    factorization, and — when ``max_chunks > 1`` — the chunked/pipelined
+    schedule (``core.overlap``) with the ``choose_chunks`` chunk count,
+    all priced by the same alpha-beta model so backend and chunk count
+    come from one consistent policy.  The flat per-round model is
+    round-order invariant (each round's cost is independent), so the
+    schedule keeps the given axis order; ``round_order`` remains an
+    empirical knob on ``factorized_all_to_all`` itself.
     """
     p = math.prod(axis_dims)
     slowest = min(axis_links, key=lambda l: l.bandwidth)
     best = Schedule("direct", (p,), (slowest,),
-                    predict_direct(p, block_bytes, slowest))
-    idx = range(len(axis_dims))
-    for order in itertools.permutations(idx):
-        dims = tuple(axis_dims[i] for i in order)
-        links = tuple(axis_links[i] for i in order)
-        t = predict_factorized(dims, links, block_bytes, p)
-        if t < best.predicted_seconds:
-            best = Schedule("factorized", dims, links, t)
+                    predict_direct(p, block_bytes, slowest) + compute_seconds)
+    t = predict_factorized(axis_dims, axis_links, block_bytes, p) \
+        + compute_seconds
+    if t < best.predicted_seconds:
+        best = Schedule("factorized", axis_dims, axis_links, t)
+    if max_chunks > 1:
+        n = choose_chunks(axis_dims, axis_links, block_bytes,
+                          max_chunks=max_chunks,
+                          compute_seconds=compute_seconds)
+        if n > 1:
+            t_n = predict_overlapped(axis_dims, axis_links, block_bytes, p,
+                                     n, compute_seconds)
+            if t_n < best.predicted_seconds:
+                best = Schedule("overlap", axis_dims, axis_links, t_n,
+                                n_chunks=n)
     return best
 
 

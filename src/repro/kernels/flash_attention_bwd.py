@@ -259,9 +259,17 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=None,
 # custom_vjp wrapper — the trainable flash attention
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp,
-                   nondiff_argnames=("causal", "window", "scale", "block_q",
-                                     "block_k", "kv_offset", "interpret"))
+_NONDIFF = ("causal", "window", "scale", "block_q", "block_k", "kv_offset",
+            "interpret")
+try:        # modern API; older runtimes only know positional argnums
+    _vjp_deco = functools.partial(jax.custom_vjp, nondiff_argnames=_NONDIFF)
+    _vjp_deco(lambda q, k, v, **kw: q)
+except TypeError:
+    _vjp_deco = functools.partial(
+        jax.custom_vjp, nondiff_argnums=tuple(range(3, 3 + len(_NONDIFF))))
+
+
+@_vjp_deco
 def flash_attention_trainable(q, k, v, causal=True, window=None, scale=None,
                               block_q=128, block_k=128, kv_offset=0,
                               interpret=False):

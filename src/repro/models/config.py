@@ -80,7 +80,12 @@ class ModelConfig:
     use_ulysses: bool = False         # Ulysses SP for attention
     expert_axes: tuple[str, ...] = ("data",)   # EP mesh axes (fastest first)
     a2a_variant: str = "natural"      # factorized A2A variant for EP/SP
-    a2a_backend: str = "tuned"   # tuned | factorized | direct | pipelined
+    # tuned | factorized | direct | pipelined | overlap
+    # "overlap" pipelines dispatch-round / expert-FFN / combine-round per
+    # payload chunk (core.overlap); "tuned" picks backend AND chunk count
+    # from the alpha-beta model (tuning.choose_algorithm).
+    a2a_backend: str = "tuned"
+    a2a_chunks: int = 0               # payload chunks; 0 = cost-model auto
 
     def __post_init__(self):
         if self.n_heads % self.n_kv_heads:

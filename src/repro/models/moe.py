@@ -28,8 +28,9 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
-from repro.core.factorized import factorized_all_to_all
-from repro.core.pipelined import pipelined_all_to_all
+from repro.core.factorized import direct_all_to_all, factorized_all_to_all
+from repro.core.overlap import overlapped_all_to_all, pipelined_all_to_all
+from repro.core.tuning import DCN, ICI, choose_algorithm
 from repro.kernels import ops as kops
 from repro.models.common import ParamSpec, silu, gelu
 from repro.parallel.sharding import ShardingRules, constrain, ep_axes, \
@@ -120,49 +121,71 @@ def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
     disp = disp.at[v_idx, sub_idx, c_idx].set(
         xt[tok_idx].astype(cd), mode="drop")
 
-    # ---- the paper's collective: blocks to expert owners ----
+    # ---- expert FFN (grouped matmul; TP over `tp_axis` on the hidden dim).
+    # Takes any capacity slice (G, E_loc, Cc, D): tokens are independent
+    # rows of the grouped matmul, so this doubles as the overlap engine's
+    # per-chunk compute stage. ----
+    def expert_ffn(recv, _chunk=0):
+        Cc = recv.shape[2]
+        xe = recv.transpose(1, 0, 2, 3).reshape(E_loc, G * Cc, D)
+        h = silu(kops.expert_matmul(xe, w1.astype(cd))) \
+            * kops.expert_matmul(xe, w3.astype(cd)) \
+            if cfg.act == "swiglu" else \
+            gelu(kops.expert_matmul(xe, w1.astype(cd)))
+        ye = kops.expert_matmul(h, w2.astype(cd))      # partial over F shard
+        if tp_axis is not None:
+            ye = jax.lax.psum(ye, tp_axis)
+        return ye.reshape(E_loc, G, Cc, D).transpose(1, 0, 2, 3)
+
+    # ---- backend policy for the paper's collective: the §5 conclusion
+    # extended one level — direct vs factorized vs chunk-overlapped, and
+    # the chunk count, all priced by the same alpha-beta model with
+    # per-axis (ICI vs DCN) links. ----
+    backend = cfg.a2a_backend
+    n_chunks = cfg.a2a_chunks
+    if axes and backend == "tuned":
+        links = tuple(DCN if a == "pod" else ICI for a in axes)
+        sizes = tuple(jax.lax.axis_size(a) for a in axes)
+        sched = choose_algorithm(
+            sizes, links,
+            block_bytes=E_loc * C * D * jnp.dtype(cd).itemsize,
+            max_chunks=cfg.a2a_chunks or 4)
+        backend = sched.kind
+        n_chunks = n_chunks or sched.n_chunks
+
     def a2a(blocks):
         if not axes:
             return blocks
         flat = blocks.reshape(G, -1)
-        backend = cfg.a2a_backend
-        if backend == "tuned":
-            # the paper's §5 conclusion as policy: factorized for the
-            # small-message (latency) regime, direct for bandwidth-bound
-            # dispatch, decided by the alpha-beta model with per-axis
-            # (ICI vs DCN) links.
-            from repro.core.tuning import DCN, ICI, choose_algorithm
-            links = tuple(DCN if a == "pod" else ICI for a in axes)
-            sizes = tuple(jax.lax.axis_size(a) for a in axes)
-            sched = choose_algorithm(
-                sizes, links,
-                block_bytes=flat.shape[1] * flat.dtype.itemsize)
-            backend = "direct" if sched.kind == "direct" else "factorized"
         if backend == "pipelined":
-            out = pipelined_all_to_all(flat, axes, n_chunks=2)
+            out = pipelined_all_to_all(flat, axes, n_chunks=n_chunks or 2,
+                                       variant=cfg.a2a_variant)
         elif backend == "direct":
-            from repro.core.factorized import direct_all_to_all
             out = direct_all_to_all(flat, axes)
-        else:
+        elif backend == "factorized":
             out = factorized_all_to_all(flat, axes,
                                         variant=cfg.a2a_variant)
+        else:
+            raise ValueError(f"unknown a2a_backend {backend!r}; expected "
+                             "tuned|factorized|direct|pipelined|overlap")
         return out.reshape(blocks.shape)
 
-    recv = checkpoint_name(a2a(disp), "moe_recv")                         # (G, E_loc, C, D)
-
-    # ---- expert FFN (grouped matmul; TP over `tp_axis` on the hidden dim)
-    xe = recv.transpose(1, 0, 2, 3).reshape(E_loc, G * C, D)
-    h = silu(kops.expert_matmul(xe, w1.astype(cd))) \
-        * kops.expert_matmul(xe, w3.astype(cd)) \
-        if cfg.act == "swiglu" else \
-        gelu(kops.expert_matmul(xe, w1.astype(cd)))
-    ye = kops.expert_matmul(h, w2.astype(cd))          # partial over F shard
-    if tp_axis is not None:
-        ye = jax.lax.psum(ye, tp_axis)
-    ye = ye.reshape(E_loc, G, C, D).transpose(1, 0, 2, 3)
-
-    # ---- reverse collective + combine ----
-    back = checkpoint_name(a2a(ye), "moe_back")
+    if axes and backend == "overlap":
+        # dispatch-round / expert-FFN / combine-round pipelined per
+        # capacity chunk: chunk c+1's rounds hide behind chunk c's FFN.
+        # Each chunk's post-dispatch state keeps the "moe_recv" name so the
+        # remat_policy="collectives" save list works unchanged.
+        back = overlapped_all_to_all(
+            disp, axes, n_chunks=n_chunks or 2, variant=cfg.a2a_variant,
+            compute_fn=lambda chunk, c: expert_ffn(
+                checkpoint_name(chunk, "moe_recv"), c),
+            reverse=True, chunk_axis=2)
+        back = checkpoint_name(back, "moe_back")
+    else:
+        recv = checkpoint_name(a2a(disp), "moe_recv")  # (G, E_loc, C, D)
+        ye = expert_ffn(recv)
+        # ---- reverse collective + combine ----
+        back = checkpoint_name(a2a(ye), "moe_back")
     pad = jnp.zeros((G, E_loc, 1, D), cd)
     backp = jnp.concatenate([back, pad], axis=2)       # dropped -> zeros
     yk = backp[v_idx, sub_idx, c_idx]                  # (N*k, D)

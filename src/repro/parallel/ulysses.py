@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.factorized import factorized_all_to_all_tiled
+from repro.core.overlap import run_pipelined
 from repro.kernels import ops as kops
 from repro.parallel.sharding import resolve_spec
 
@@ -24,6 +25,21 @@ from repro.parallel.sharding import resolve_spec
 def _sp_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("model",) if a in mesh.shape
                  and mesh.shape[a] > 1)
+
+
+def _overlap_chunks(cfg, Hkv: int, sp: int) -> int:
+    """Head-group chunk count for the pipelined re-shard.
+
+    Chunks are contiguous KV-head groups (their q heads ride along), so
+    each chunk's attention is self-contained; feasibility requires the
+    per-chunk KV heads to still absorb the SP degree: Hkv % (sp*n) == 0.
+    Shrinks the requested count until feasible (1 = fall back)."""
+    if cfg.a2a_backend != "overlap":
+        return 1
+    n = max(1, cfg.a2a_chunks or 2)
+    while n > 1 and Hkv % (sp * n):
+        n -= 1
+    return n
 
 
 def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
@@ -55,8 +71,46 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
 
     group = Hq // Hkv
     hq_loc = Hq // sp
+    n_chunks = _overlap_chunks(cfg, Hkv, sp) if kv_a2a else 1
+
+    def inner_overlap(ql, kl, vl):
+        # Chunked seq<->heads re-shard (core.overlap): split the heads
+        # into KV-group-aligned chunks and software-pipeline
+        #   reshard chunk c ‖ attention chunk c-1 ‖ reverse-reshard c-2
+        # so chunk c's tiled all-to-alls sit next to (and overlap with)
+        # chunk c-1's attention in program order.
+        def split(a, n):
+            if a.shape[1] % n:   # guarded by _overlap_chunks; never drop
+                raise ValueError(f"head axis {a.shape[1]} not divisible "
+                                 f"into {n} chunks")
+            step = a.shape[1] // n
+            return [a[:, i * step:(i + 1) * step] for i in range(n)]
+
+        states = list(zip(split(ql, n_chunks), split(kl, n_chunks),
+                          split(vl, n_chunks)))
+
+        def reshard(st, _c):
+            q_, k_, v_ = st
+            return (factorized_all_to_all_tiled(q_, axes, 1, 2),
+                    factorized_all_to_all_tiled(k_, axes, 1, 2),
+                    factorized_all_to_all_tiled(v_, axes, 1, 2))
+
+        def attend(st, _c):
+            qh, kh, vh = st
+            return kops.attention(qh, kh, vh, causal=causal,
+                                  window=cfg.window,
+                                  impl=cfg.attention_impl)
+
+        def unshard(oh, _c):
+            return factorized_all_to_all_tiled(oh, axes, split_axis=2,
+                                               concat_axis=1)
+
+        outs = run_pipelined(states, [reshard, attend, unshard])
+        return jnp.concatenate(outs, axis=1)
 
     def inner(ql, kl, vl):
+        if n_chunks > 1:
+            return inner_overlap(ql, kl, vl)
         # ql: (B_loc, Hq, S_loc, hd) -> heads sharded, full seq
         qh = factorized_all_to_all_tiled(ql, axes, split_axis=1,
                                          concat_axis=2)

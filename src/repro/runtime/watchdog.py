@@ -24,6 +24,10 @@ class StragglerWatchdog:
     window: int = 50
     slow_factor: float = 2.5       # step > factor * median -> straggler
     hang_factor: float = 10.0      # step > factor * median -> presumed hang
+    # absolute floor for the (fatal) hang verdict: a real hung collective
+    # stalls for seconds, while a millisecond-scale median makes the
+    # relative test promote OS scheduling jitter to an abort
+    hang_floor_seconds: float = 1.0
     min_samples: int = 5
     _times: deque = field(default_factory=lambda: deque(maxlen=256))
     events: list = field(default_factory=list)
@@ -36,7 +40,8 @@ class StragglerWatchdog:
             return "ok"
         med = statistics.median(history)
         mad = statistics.median([abs(t - med) for t in history]) or 1e-9
-        if seconds > max(self.hang_factor * med, med + 20 * mad):
+        if seconds > max(self.hang_factor * med, med + 20 * mad) \
+                and seconds >= self.hang_floor_seconds:
             self.events.append(("hang", step, seconds, med))
             return "hang"
         if seconds > max(self.slow_factor * med, med + 8 * mad):

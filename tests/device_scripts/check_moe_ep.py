@@ -57,6 +57,9 @@ def main():
     run(4, a2a_backend="direct")
     run(4, a2a_backend="pipelined")
     run(4, a2a_backend="tuned")
+    run(4, a2a_backend="overlap")   # pipelined dispatch/FFN/combine
+    run(8, a2a_backend="overlap")   # E > G under the overlap engine
+    run(2, a2a_backend="overlap")   # replicas under the overlap engine
     run(4, a2a_variant="paper")
     return 0
 

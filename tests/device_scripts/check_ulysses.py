@@ -18,13 +18,14 @@ from repro.models.config import ModelConfig
 from repro.parallel.ulysses import ulysses_attention
 
 
-def run(Hq, Hkv, causal=True, window=None):
+def run(Hq, Hkv, causal=True, window=None, backend="tuned", chunks=0):
     mesh = jax.make_mesh((2, 4), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
     cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
                       n_heads=Hq, n_kv_heads=Hkv, d_ff=64, vocab=32,
                       window=window, use_ulysses=True,
-                      param_dtype="float32", compute_dtype="float32")
+                      param_dtype="float32", compute_dtype="float32",
+                      a2a_backend=backend, a2a_chunks=chunks)
     B, S, hd = 4, 32, 16
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (B, Hq, S, hd))
@@ -39,7 +40,8 @@ def run(Hq, Hkv, causal=True, window=None):
     out = f(qg, kg, vg)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
-    print(f"OK Ulysses Hq={Hq} Hkv={Hkv} causal={causal} window={window}")
+    print(f"OK Ulysses Hq={Hq} Hkv={Hkv} causal={causal} window={window} "
+          f"backend={backend}")
 
 
 def main():
@@ -48,6 +50,10 @@ def main():
     run(8, 2)              # GQA: KV all-gather path
     run(4, 4, causal=False)
     run(8, 8, window=8)    # SWA under SP
+    # chunked (overlap-engine) re-shard: 2 KV-head-group chunks
+    run(8, 8, backend="overlap", chunks=2)
+    run(16, 8, backend="overlap", chunks=2)   # GQA group=2, chunked
+    run(8, 4, backend="overlap", chunks=2)    # infeasible -> falls back
     return 0
 
 

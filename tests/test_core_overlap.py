@@ -1,0 +1,247 @@
+"""Device-free unit tests for the overlap engine (core.overlap), the
+overlap-aware cost model (tuning.predict_overlapped / choose_chunks /
+choose_algorithm), and the HLO interleave verifier.
+
+Multi-device parity of overlap == factorized == direct runs in
+``tests/device_scripts/check_overlap.py`` (see test_multidevice.py).
+"""
+
+import math
+
+import pytest
+
+from repro.core.hlo_inspect import interleave_report
+from repro.core.overlap import pipeline_order, run_pipelined
+from repro.core.tuning import (
+    DCN,
+    ICI,
+    LinkModel,
+    choose_algorithm,
+    choose_chunks,
+    predict_factorized,
+    predict_overlapped,
+)
+
+
+class TestPipelineSchedule:
+    def test_order_is_a_permutation_of_all_stage_instances(self):
+        for n_chunks, n_stages in [(1, 1), (1, 4), (3, 1), (2, 5), (4, 3)]:
+            got = list(pipeline_order(n_chunks, n_stages))
+            assert sorted(got) == [(c, s) for c in range(n_chunks)
+                                   for s in range(n_stages)]
+
+    def test_chunk_stages_stay_ordered(self):
+        # stage s of chunk c must precede stage s+1 of chunk c (data dep)
+        got = list(pipeline_order(3, 4))
+        for c in range(3):
+            chunk_stages = [s for cc, s in got if cc == c]
+            assert chunk_stages == sorted(chunk_stages)
+
+    def test_steps_interleave_chunks(self):
+        # 2 chunks, 5 stages (2 fwd rounds, compute, 2 rev rounds): chunk
+        # 1's round-1 and chunk 0's reverse-round sit between the two
+        # compute stages (indices 2 == compute).
+        got = list(pipeline_order(2, 5))
+        i_comp0 = got.index((0, 2))
+        i_comp1 = got.index((1, 2))
+        between = got[i_comp0 + 1:i_comp1]
+        assert (1, 1) in between and (0, 3) in between
+
+    def test_run_pipelined_equals_sequential(self):
+        # Pure program-order transformation: the result must equal running
+        # each chunk's stages back to back.
+        stages = [lambda st, c, k=k: st + [(k, c)] for k in range(4)]
+        states = [[("init", c)] for c in range(3)]
+        got = run_pipelined(states, stages)
+        want = [[("init", c)] + [(k, c) for k in range(4)] for c in range(3)]
+        assert got == want
+
+    def test_emission_log_is_pipelined(self):
+        log = []
+
+        def mk(k):
+            def stage(st, c):
+                log.append((c, k))
+                return st
+            return stage
+
+        run_pipelined([0, 0], [mk(0), mk(1), mk(2)])
+        assert log == list(pipeline_order(2, 3))
+
+
+UNIFORM = LinkModel(alpha=1e-6, bandwidth=50e9)
+
+
+class TestPredictOverlapped:
+    def test_converges_to_factorized_at_one_chunk(self):
+        for dims in [(4, 4), (2, 3, 4), (16, 2)]:
+            links = (UNIFORM,) * len(dims)
+            p = math.prod(dims)
+            for b in (4.0, 1e3, 1e6):
+                assert predict_overlapped(dims, links, b, p, 1) \
+                    == pytest.approx(predict_factorized(dims, links, b, p))
+
+    def test_latency_monotone_in_chunks(self):
+        # zero payload isolates the alpha term: pipeline fill/drain makes
+        # it strictly nondecreasing in n_chunks.
+        dims, links = (4, 4, 4), (UNIFORM,) * 3
+        p = math.prod(dims)
+        ts = [predict_overlapped(dims, links, 0.0, p, n)
+              for n in range(1, 9)]
+        assert all(t1 >= t0 for t0, t1 in zip(ts, ts[1:]))
+        assert ts[-1] > ts[0]
+
+    def test_bandwidth_term_shrinks_with_overlap(self):
+        # zero latency isolates the beta term: n chunks divide it by
+        # min(d, n), saturating at d.
+        dims = (4, 4, 4)
+        links = (LinkModel(alpha=0.0, bandwidth=50e9),) * 3
+        p, b = math.prod(dims), 1e6
+        t1 = predict_overlapped(dims, links, b, p, 1)
+        t3 = predict_overlapped(dims, links, b, p, 3)
+        t8 = predict_overlapped(dims, links, b, p, 8)
+        assert t3 == pytest.approx(t1 / 3)
+        assert t8 == pytest.approx(t1 / 3)   # saturated at d=3
+
+    def test_compute_hides_behind_communication(self):
+        dims, links = (4, 4), (UNIFORM,) * 2
+        p, b = 16, 1e6
+        t_comm = predict_overlapped(dims, links, b, p, 4)
+        small_compute = t_comm / 10
+        t = predict_overlapped(dims, links, b, p, 4, small_compute)
+        # hidden up to the 1/n fill fraction, far below serial comm+compute
+        assert t < t_comm + small_compute
+        assert t == pytest.approx(t_comm + small_compute / 4)
+
+    def test_choose_chunks_agrees_with_model(self):
+        for dims, links, b in [
+            ((4, 4), (ICI, ICI), 4.0),
+            ((4, 4), (ICI, ICI), 1 << 20),
+            ((16, 2), (ICI, DCN), 1 << 14),
+            ((2, 3, 4), (ICI, ICI, DCN), 1 << 18),
+        ]:
+            p = math.prod(dims)
+            n = choose_chunks(dims, links, b, max_chunks=8)
+            t_star = predict_overlapped(dims, links, b, p, n)
+            for m in range(1, 9):
+                assert t_star <= predict_overlapped(dims, links, b, p, m) \
+                    + 1e-18
+
+    def test_tiny_payload_prefers_no_chunking(self):
+        assert choose_chunks((4, 4), (ICI, ICI), 4.0) == 1
+
+    def test_large_payload_prefers_chunking(self):
+        assert choose_chunks((4, 4), (ICI, ICI), float(1 << 22)) > 1
+
+
+class TestChooseAlgorithmOverlap:
+    def test_default_behavior_unchanged(self):
+        s = choose_algorithm((16, 16), (ICI, ICI), 4.0)
+        assert s.kind == "factorized" and s.n_chunks == 1
+
+    def test_overlap_considered_with_max_chunks(self):
+        # medium-large payload on a 2d torus: chunk-overlap beats plain
+        # factorized (bandwidth / min(d, n)) and the direct collective
+        # once the DCN axis makes direct expensive.
+        s = choose_algorithm((16, 4), (ICI, DCN), float(1 << 16),
+                             max_chunks=8)
+        assert s.kind == "overlap" and s.n_chunks > 1
+        # the schedule's prediction matches the model at its chunk count
+        t = predict_overlapped(s.dims, s.links, float(1 << 16), 64,
+                               s.n_chunks)
+        assert s.predicted_seconds == pytest.approx(t)
+
+    def test_overlap_never_selected_when_disabled(self):
+        s = choose_algorithm((16, 4), (ICI, DCN), float(1 << 16))
+        assert s.kind in ("direct", "factorized")
+
+
+SEQUENTIAL_HLO = """
+HloModule seq
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %a0 = f32[16,128]{1,0} all-to-all(%p0), replica_groups={{0,1}}
+  %a1 = f32[16,128]{1,0} all-to-all(%a0), replica_groups={{0,2}}
+  %d0 = f32[16,128]{1,0} dot(%a1, %a1), lhs_contracting_dims={1}
+  %d1 = f32[16,128]{1,0} dot(%d0, %d0), lhs_contracting_dims={1}
+  %a2 = f32[16,128]{1,0} all-to-all(%d1), replica_groups={{0,2}}
+  ROOT %a3 = f32[16,128]{1,0} all-to-all(%a2), replica_groups={{0,1}}
+}
+"""
+
+OVERLAPPED_HLO = """
+HloModule ovl
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %a0 = f32[16,128]{1,0} all-to-all(%p0), replica_groups={{0,1}}
+  %a1 = f32[16,128]{1,0} all-to-all(%a0), replica_groups={{0,2}}
+  %a2 = f32[16,128]{1,0} all-to-all(%a1), replica_groups={{0,1}}
+  %d0 = f32[16,128]{1,0} dot(%a2, %a2), lhs_contracting_dims={1}
+  %a3 = f32[16,128]{1,0} all-to-all(%d0), replica_groups={{0,2}}
+  %a4 = f32[16,128]{1,0} all-to-all(%a3), replica_groups={{0,2}}
+  %d1 = f32[16,128]{1,0} dot(%a4, %a4), lhs_contracting_dims={1}
+  %a5 = f32[16,128]{1,0} all-to-all(%d1), replica_groups={{0,1}}
+  ROOT %a6 = f32[16,128]{1,0} all-to-all(%a5), replica_groups={{0,2}}
+}
+"""
+
+
+class TestInterleaveReport:
+    def test_sequential_program_has_two_collective_runs(self):
+        rep = interleave_report(SEQUENTIAL_HLO)
+        assert rep.collective_runs == 2
+        assert rep.interleaved_collectives == 0
+
+    def test_overlapped_program_interleaves(self):
+        rep = interleave_report(OVERLAPPED_HLO)
+        assert rep.collective_runs == 3
+        assert rep.interleaved_collectives >= 2
+        assert [r for r in rep.runs] == [("collective", 3), ("compute", 1),
+                                         ("collective", 2), ("compute", 1),
+                                         ("collective", 2)]
+
+    def test_done_ops_and_other_collectives_filtered(self):
+        text = """
+HloModule t
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %s = f32[8] all-to-all-start(%p0), replica_groups={{0,1}}
+  %e = f32[8] all-to-all-done(%s)
+  %d = f32[8] dot(%e, %e), lhs_contracting_dims={0}
+  %g = f32[8] all-gather(%d), replica_groups={{0,1}}
+  ROOT %a = f32[8] all-to-all(%g), replica_groups={{0,1}}
+}
+"""
+        rep = interleave_report(text)
+        # -start counted once, -done skipped, all-gather excluded by the
+        # default all-to-all filter
+        assert [cls for cls, _ in rep.events] \
+            == ["collective", "compute", "collective"]
+        rep_all = interleave_report(text, collective_kind=None)
+        assert [cls for cls, _ in rep_all.events] \
+            == ["collective", "compute", "collective", "collective"]
+
+
+class TestOverlapSingleDevice:
+    def test_trivial_torus_applies_compute_stage(self):
+        # p == 1 (all torus dims trivial): the engine degenerates to the
+        # compute stage alone, chunked.
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core.overlap import overlapped_all_to_all
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+
+        def loc(xl):
+            return overlapped_all_to_all(
+                xl, ("x",), n_chunks=2,
+                compute_fn=lambda chunk, c: chunk * (c + 1.0))
+
+        x = jnp.arange(8.0).reshape(1, 8)
+        y = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=P("x"),
+                                  out_specs=P("x")))(x)
+        want = np.concatenate([np.arange(4.0) * 1.0,
+                               np.arange(4.0, 8.0) * 2.0]).reshape(1, 8)
+        np.testing.assert_allclose(np.array(y), want)

@@ -1,0 +1,49 @@
+"""Property tests (hypothesis) for the core index/factorization math.
+
+Collected only where ``hypothesis`` is installed (see requirements-dev.txt);
+the deterministic pins for the same components live in
+``test_core_simulator.py`` / ``test_core_units.py`` and always run.
+"""
+
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.dims import dims_create  # noqa: E402
+from repro.core.simulator import check_correct  # noqa: E402
+
+
+class TestDimsCreateProperties:
+    @given(st.integers(1, 4096), st.integers(1, 6))
+    @settings(max_examples=80, deadline=None)
+    def test_valid_factorization(self, n, d):
+        f = dims_create(n, d)
+        assert len(f) == d
+        assert math.prod(f) == n
+        assert list(f) == sorted(f, reverse=True)
+
+    @given(st.integers(2, 1024))
+    @settings(max_examples=50, deadline=None)
+    def test_d2_minimizes_max_factor(self, n):
+        a, b = dims_create(n, 2)
+        # no divisor pair with smaller max
+        for f in range(a - 1, int(math.isqrt(n)) - 1, -1):
+            assert f == 0 or n % f != 0 or max(f, n // f) >= a
+
+
+class TestSimulatorProperties:
+    @given(st.lists(st.integers(2, 5), min_size=1, max_size=4))
+    @settings(max_examples=40, deadline=None)
+    def test_random_factorizations(self, dims):
+        dims = tuple(dims)
+        if math.prod(dims) > 200:
+            dims = dims[:2]
+        assert check_correct(dims)
+
+    @given(st.permutations(list(range(3))))
+    @settings(max_examples=6, deadline=None)
+    def test_round_orders_commute(self, order):
+        assert check_correct((2, 3, 4), tuple(order))

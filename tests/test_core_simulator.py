@@ -2,14 +2,14 @@
 
 The simulator models the MPI implementation (flat buffers, derived
 datatypes, double buffering) exactly; these tests pin it to the paper's own
-worked examples and Theorem 1, and property-test correctness over random
-factorizations (hypothesis).
+worked examples and Theorem 1.  The hypothesis property tests over random
+factorizations live in ``test_core_properties.py`` behind
+``pytest.importorskip("hypothesis")`` so this module collects everywhere.
 """
 
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.simulator import (
     PAPER_EXAMPLES,
@@ -73,18 +73,10 @@ class TestCorrectness:
     def test_factorized_equals_direct(self, dims):
         assert check_correct(dims)
 
-    @given(st.lists(st.integers(2, 5), min_size=1, max_size=4))
-    @settings(max_examples=40, deadline=None)
-    def test_random_factorizations(self, dims):
-        dims = tuple(dims)
-        if math.prod(dims) > 200:
-            dims = dims[:2]
-        assert check_correct(dims)
-
-    @given(st.permutations(list(range(3))))
-    @settings(max_examples=6, deadline=None)
+    @pytest.mark.parametrize("order", [(0, 1, 2), (2, 1, 0), (1, 0, 2)])
     def test_round_orders_commute(self, order):
-        assert check_correct((2, 3, 4), tuple(order))
+        # deterministic pin; full permutation sweep in test_core_properties
+        assert check_correct((2, 3, 4), order)
 
 
 class TestTheorem1:

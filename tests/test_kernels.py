@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _property import given, settings, st
 
 from repro.core.simulator import round_datatype
 from repro.kernels.block_reorder import datatype_pack, datatype_unpack

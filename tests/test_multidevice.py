@@ -22,6 +22,15 @@ def test_zero_copy_hlo():
 
 
 @pytest.mark.slow
+def test_overlap_engine_parity():
+    out = run_device_script("check_overlap.py", devices=8)
+    assert "OK overlap==factorized==direct" in out
+    assert "OK fwd/compute/reverse pipeline" in out
+    assert "OK tiled overlap" in out
+    assert "OK MoE overlap HLO interleaved" in out
+
+
+@pytest.mark.slow
 def test_moe_expert_parallel():
     out = run_device_script("check_moe_ep.py", devices=8)
     assert "replicated" in out and "partitioned" in out
@@ -30,7 +39,8 @@ def test_moe_expert_parallel():
 @pytest.mark.slow
 def test_ulysses_sequence_parallel():
     out = run_device_script("check_ulysses.py", devices=8)
-    assert out.count("OK Ulysses") == 4
+    assert out.count("OK Ulysses") == 7
+    assert out.count("backend=overlap") == 3
 
 
 @pytest.mark.slow

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _property import given, settings, st
 
 from repro.checkpoint import CheckpointManager, latest_step, \
     restore_checkpoint, save_checkpoint
@@ -133,7 +133,7 @@ class TestCheckpoint:
         tree = {"a": jnp.ones(8)}
         path = save_checkpoint(tmp_path, 1, tree)
         leaf = next(path.glob("leaf_*.zst"))
-        import zstandard as zstd
+        from repro.checkpoint.store import zstd   # module or zlib fallback
         bad = zstd.ZstdCompressor().compress(
             np.zeros(8, np.float32).tobytes())
         leaf.write_bytes(bad)
