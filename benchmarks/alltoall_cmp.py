@@ -1,5 +1,5 @@
 """Paper §5 (Figures 1–3): factorized vs direct all-to-all over message
-sizes.
+sizes, executed through the ``A2APlan`` API.
 
 Protocol mirrors the paper: element counts in deciles 1..10000 of int32
 ("MPI_INT") per process pair, 8 warmup + 40 measured repetitions,
@@ -10,6 +10,14 @@ plus the chunk-pipelined ``overlap[d=2]`` schedule (core.overlap) — on
 the CPU harness overlap carries correctness-priced overhead only and
 should sit within noise of ``factorized[d=2]``; the link-level win needs
 multi-ported hardware (see tuning.predict_overlapped).
+
+Each row additionally measures the paper's *cached-communicator
+amortization* on our stack (Listings 1–2: setup once, reuse forever):
+
+* ``plan_cold_us``   — ``plan_all_to_all`` with an empty registry: the
+  full once-per-plan resolution (factorization, cost model, schedule).
+* ``plan_cached_us`` — the same call hitting the LRU plan registry, i.e.
+  the per-call cost every steady-state all-to-all actually pays.
 
 This is the CPU-backend *measured* analogue; the TPU-regime predictions
 come from the tuning model and the roofline artifacts.  Run via:
@@ -28,12 +36,14 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.core import dims_create, host_alltoall
-from repro.core.cache import cart_create
+from repro.core import dims_create
+from repro.core.cache import cart_create, free_all
+from repro.core.plan import free_plans, plan_all_to_all, plan_cache_stats
 
 P_PROCS = 16
 ELEMENTS = (1, 10, 100, 1000, 10000)
 WARMUP, REPS = 8, 40
+PLAN_REPS = 200
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
@@ -47,6 +57,28 @@ def bench(fn, x):
         jax.block_until_ready(fn(x))
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def bench_plan_construction(mesh, names, nelem, backend):
+    """(cold_seconds, cached_seconds) for one plan resolution, best-of
+    (same protocol as the collective timings).  Cold clears *both*
+    registries (plans and factorization descriptors + fingerprint memo)
+    so it prices the full once-per-plan setup."""
+    kw = dict(block_shape=(nelem,), dtype=jnp.int32, backend=backend)
+    cold = float("inf")
+    for _ in range(8):
+        free_plans()
+        free_all()
+        t0 = time.perf_counter()
+        plan_all_to_all(mesh, names, **kw)
+        cold = min(cold, time.perf_counter() - t0)
+    cached = float("inf")
+    for _ in range(8):
+        t0 = time.perf_counter()
+        for _ in range(PLAN_REPS):
+            plan_all_to_all(mesh, names, **kw)
+        cached = min(cached, (time.perf_counter() - t0) / PLAN_REPS)
+    return cold, cached
 
 
 def main():
@@ -64,14 +96,26 @@ def main():
     for impl, dims, backend in variants:
         names = tuple(f"t{i}" for i in range(len(dims)))
         mesh = cart_create(P_PROCS, tuple(reversed(dims)), names)
-        fn = host_alltoall(mesh, names, backend=backend)
         for nelem in ELEMENTS:
+            plan = plan_all_to_all(mesh, names, block_shape=(nelem,),
+                                   dtype=jnp.int32, backend=backend)
+            fn = plan.host_fn()
             x = jnp.ones((P_PROCS, P_PROCS, nelem), jnp.int32)
             sec = bench(fn, x)
+            cold, cached = bench_plan_construction(mesh, names, nelem,
+                                                   backend)
             rows.append({"impl": impl, "dims": list(dims),
-                         "block_elems": nelem, "seconds": sec})
-            print(f"alltoall_cmp,{impl},{nelem},{sec * 1e6:.1f}")
+                         "block_elems": nelem, "seconds": sec,
+                         "plan_cold_us": cold * 1e6,
+                         "plan_cached_us": cached * 1e6,
+                         "plan": plan.describe()})
+            print(f"alltoall_cmp,{impl},{nelem},{sec * 1e6:.1f},"
+                  f"plan_cold={cold * 1e6:.1f}us,"
+                  f"plan_cached={cached * 1e6:.2f}us")
 
+    stats = plan_cache_stats()
+    print(f"alltoall_cmp,plan_cache,hits={stats['hits']},"
+          f"misses={stats['misses']},evictions={stats['evictions']}")
     ARTIFACTS.mkdir(exist_ok=True)
     (ARTIFACTS / "alltoall_cmp.json").write_text(json.dumps(rows, indent=1))
     return 0

@@ -18,7 +18,17 @@ from .cache import (
     cache_stats,
     cart_create,
     free,
+    free_all,
     get_factorization,
+    set_cache_capacity,
+)
+from .plan import (
+    A2APlan,
+    free_plans,
+    plan_all_to_all,
+    plan_cache_entries,
+    plan_cache_stats,
+    set_plan_cache_capacity,
 )
 from .simulator import (
     PAPER_EXAMPLES,
@@ -48,16 +58,18 @@ from .overlap import (
 )
 
 __all__ = [
-    "DCN", "ICI", "LinkModel", "Measurement", "PAPER_EXAMPLES", "Schedule",
-    "TorusFactorization", "Violation", "cache_stats", "cart_create",
-    "check_guidelines", "choose_algorithm", "choose_chunks",
+    "A2APlan", "DCN", "ICI", "LinkModel", "Measurement", "PAPER_EXAMPLES",
+    "Schedule", "TorusFactorization", "Violation", "cache_stats",
+    "cart_create", "check_guidelines", "choose_algorithm", "choose_chunks",
     "collective_bytes_of", "crossover_block_bytes", "dims_create",
     "direct_all_to_all", "direct_all_to_all_tiled", "example_index_table",
     "factorized_all_to_all", "factorized_all_to_all_tiled", "format_report",
-    "free", "get_factorization", "host_alltoall", "interleave_report",
-    "max_dims", "overlapped_all_to_all", "overlapped_all_to_all_tiled",
-    "parse_hlo", "pipeline_order", "pipelined_all_to_all",
-    "predict_overlapped", "prime_factorization", "round_datatype",
-    "run_pipelined", "simulate_direct_alltoall",
+    "free", "free_all", "free_plans", "get_factorization", "host_alltoall",
+    "interleave_report", "max_dims", "overlapped_all_to_all",
+    "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
+    "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",
+    "plan_cache_stats", "predict_overlapped", "prime_factorization",
+    "round_datatype", "run_pipelined", "set_cache_capacity",
+    "set_plan_cache_capacity", "simulate_direct_alltoall",
     "simulate_factorized_alltoall",
 ]

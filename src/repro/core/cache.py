@@ -10,19 +10,24 @@ attribute caching (a hidden keyval, Listing 2).  In JAX the analogue is:
   "communicators" for free: a ``shard_map`` collective over one named axis
   *is* the concurrent per-group collective.
 * ``TorusFactorization`` — the cached descriptor: dims, strides, round
-  schedule, chosen variant.  Descriptors are cached in a registry keyed by
-  (device fingerprint, dims, names) so repeated all-to-all calls never
-  recompute the factorization or rebuild the mesh (mesh construction and
-  jit tracing play the role of the paper's datatype/communicator setup
-  cost, paid once).
-* ``free()`` — the analogue of the delete callback (Listing 2's
-  ``torusdel``), evicting the cache entry.
+  schedule, chosen variant.  Descriptors are cached in a bounded LRU
+  registry keyed by (device fingerprint, dims, names) so repeated
+  all-to-all calls never recompute the factorization or rebuild the mesh
+  (mesh construction and jit tracing play the role of the paper's
+  datatype/communicator setup cost, paid once).  ``core.plan`` keys its
+  ``A2APlan`` cache alongside the same fingerprint.
+* ``free()`` / ``free_all()`` — the analogue of the delete callback
+  (Listing 2's ``torusdel``), evicting cache entries; the LRU capacity
+  (``set_cache_capacity``) bounds the registry so long-running serving
+  processes that cycle through many meshes cannot grow it unboundedly.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable
 
 import jax
 import numpy as np
@@ -30,6 +35,68 @@ from jax.sharding import Mesh
 
 from .dims import dims_create
 from .simulator import strides
+
+
+class LRUCache:
+    """Minimal bounded LRU mapping with hit/miss/eviction accounting.
+
+    Shared by the factorization registry below and the ``A2APlan`` registry
+    in ``core.plan``; eviction may run a callback (the paper's delete
+    callback, Listing 2).
+    """
+
+    def __init__(self, capacity: int = 128,
+                 on_evict: Callable | None = None):
+        self.capacity = int(capacity)
+        self.on_evict = on_evict
+        self._data: OrderedDict = OrderedDict()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def keys(self):
+        return list(self._data.keys())
+
+    def values(self):
+        return list(self._data.values())
+
+    def get(self, key):
+        """Return the cached value (refreshing recency) or None; counts a
+        hit or miss."""
+        if key in self._data:
+            self.stats["hits"] += 1
+            self._data.move_to_end(key)
+            return self._data[key]
+        self.stats["misses"] += 1
+        return None
+
+    def put(self, key, value):
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > max(1, self.capacity):
+            _, evicted = self._data.popitem(last=False)
+            self.stats["evictions"] += 1
+            if self.on_evict is not None:
+                self.on_evict(evicted)
+        return value
+
+    def pop(self, key):
+        return self._data.pop(key, None)
+
+    def clear(self):
+        self._data.clear()
+
+    def set_capacity(self, capacity: int):
+        self.capacity = int(capacity)
+        while len(self._data) > max(1, self.capacity):
+            _, evicted = self._data.popitem(last=False)
+            self.stats["evictions"] += 1
+            if self.on_evict is not None:
+                self.on_evict(evicted)
 
 
 @dataclass(frozen=True)
@@ -90,8 +157,11 @@ def cart_create(devices, dims: tuple[int, ...],
     return Mesh(arr, tuple(reversed(names)))
 
 
-_REGISTRY: dict[tuple, tuple[Mesh | None, TorusFactorization]] = {}
+_REGISTRY: LRUCache = LRUCache(capacity=128)
 _SPLIT_COUNTER = {"cart_creates": 0, "lookups": 0}
+
+
+_FINGERPRINTS: "weakref.WeakKeyDictionary[Mesh, tuple]" | None = None
 
 
 def device_fingerprint(mesh: Mesh) -> tuple:
@@ -101,9 +171,26 @@ def device_fingerprint(mesh: Mesh) -> tuple:
     topology) and platform, NOT ``id(device)`` — CPython object identity
     changes whenever the device list is rebuilt, which silently defeated
     the cache across descriptor re-lookups through fresh ``Mesh`` objects.
+    Memoized per Mesh object so steady-state plan fetches don't re-walk
+    the device list (a Mesh is immutable; rebuilt meshes over the same
+    devices hash to the same fingerprint anyway).
     """
-    devs = mesh.devices.flat
-    return tuple((int(d.id), getattr(d, "platform", "?")) for d in devs)
+    global _FINGERPRINTS
+    if _FINGERPRINTS is None:
+        import weakref
+        _FINGERPRINTS = weakref.WeakKeyDictionary()
+    try:
+        fp = _FINGERPRINTS.get(mesh)
+    except TypeError:       # unhashable / non-weakref-able mesh subclass
+        fp = None
+    if fp is None:
+        fp = tuple((int(d.id), getattr(d, "platform", "?"))
+                   for d in mesh.devices.flat)
+        try:
+            _FINGERPRINTS[mesh] = fp
+        except TypeError:
+            pass
+    return fp
 
 
 def _key(devices_fingerprint, dims, names, variant):
@@ -131,18 +218,37 @@ def get_factorization(mesh: Mesh, axis_names=None, *, d: int | None = None,
         axis_names = tuple(f"t{i}" for i in range(d))
     key = _key(device_fingerprint(mesh), dims, axis_names, variant)
     _SPLIT_COUNTER["lookups"] += 1
-    if key not in _REGISTRY:
+    hit = _REGISTRY.get(key)
+    if hit is None:
         _SPLIT_COUNTER["cart_creates"] += 1
-        _REGISTRY[key] = (None, TorusFactorization(axis_names, dims, variant))
-    return _REGISTRY[key][1]
+        hit = _REGISTRY.put(key, TorusFactorization(axis_names, dims,
+                                                    variant))
+    return hit
 
 
 def free(descriptor: TorusFactorization) -> None:
     """The delete-callback analogue: evict all cache entries using it."""
-    dead = [k for k, (_, v) in _REGISTRY.items() if v == descriptor]
+    dead = [k for k in _REGISTRY.keys() if _REGISTRY._data[k] == descriptor]
     for k in dead:
-        del _REGISTRY[k]
+        _REGISTRY.pop(k)
+
+
+def free_all() -> None:
+    """Evict every cached factorization descriptor (and the per-Mesh
+    fingerprint memo), restoring the full cold-start setup cost."""
+    _REGISTRY.clear()
+    if _FINGERPRINTS is not None:
+        _FINGERPRINTS.clear()
+
+
+def set_cache_capacity(capacity: int) -> None:
+    """Bound the factorization registry (evicting LRU entries if needed)."""
+    _REGISTRY.set_capacity(capacity)
 
 
 def cache_stats() -> dict[str, int]:
-    return dict(_SPLIT_COUNTER)
+    out = dict(_SPLIT_COUNTER)
+    out.update(_REGISTRY.stats)
+    out["size"] = len(_REGISTRY)
+    out["capacity"] = _REGISTRY.capacity
+    return out

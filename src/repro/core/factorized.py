@@ -1,5 +1,10 @@
 """Factorized (torus) all-to-all — Algorithm 1 of the paper, in JAX.
 
+The kernels here (``_direct_impl``, ``_factorized_impl`` and their tiled
+forms) are executed through ``core.plan.A2APlan``, the cached plan-object
+API; the public free functions at the bottom are deprecation shims that
+build-or-fetch a plan and delegate.
+
 These functions run *inside* ``jax.shard_map`` over a mesh whose axes play
 the role of the torus dimensions (the Cartesian communicator).  The local
 operand is an array of ``p`` blocks; block ``i`` is destined for the device
@@ -48,14 +53,22 @@ aggregation per round and dimension-local (single-torus-axis) traffic.
 from __future__ import annotations
 
 import math
+import warnings
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 Variant = str  # "natural" | "paper"
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    """The free functions below are legacy shims over ``core.plan``."""
+    warnings.warn(
+        f"repro.core.{old} is deprecated; build a plan once via "
+        f"repro.core.plan.plan_all_to_all(...) and call {new} on it",
+        DeprecationWarning, stacklevel=3)
 
 
 def _axis_sizes(axis_names: tuple[str, ...]) -> tuple[int, ...]:
@@ -75,15 +88,15 @@ def _skip_trivial(axis_names, dims):
     return tuple(names), tuple(sizes)
 
 
-def direct_all_to_all(x, axis_names):
+def _direct_impl(x, axis_names):
     """Baseline: one collective over the full (product) communicator."""
     axis_names = _as_tuple(axis_names)
     return lax.all_to_all(x, tuple(reversed(axis_names)), split_axis=0,
                           concat_axis=0, tiled=False)
 
 
-def factorized_all_to_all(x, axis_names, *, variant: Variant = "natural",
-                          round_order=None):
+def _factorized_impl(x, axis_names, *, variant: Variant = "natural",
+                     round_order=None):
     """d-round torus all-to-all of ``p`` blocks (Algorithm 1).
 
     Args:
@@ -138,9 +151,9 @@ def factorized_all_to_all(x, axis_names, *, variant: Variant = "natural",
     return A.reshape((p,) + block)
 
 
-def factorized_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
-                                variant: Variant = "natural",
-                                round_order=None):
+def _factorized_tiled_impl(x, axis_names, split_axis, concat_axis, *,
+                           variant: Variant = "natural",
+                           round_order=None):
     """Tiled-semantics factorized all-to-all.
 
     Drop-in for ``lax.all_to_all(x, tuple(reversed(axis_names)), split_axis,
@@ -160,8 +173,8 @@ def factorized_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
     # View the split axis as (p, S//p); bring the p-axis to the front.
     xb = x.reshape(shape[:split_axis] + (p, S // p) + shape[split_axis + 1:])
     xb = jnp.moveaxis(xb, split_axis, 0)
-    out = factorized_all_to_all(xb, axis_names, variant=variant,
-                                round_order=round_order)
+    out = _factorized_impl(xb, axis_names, variant=variant,
+                           round_order=round_order)
     # out: [p(source), orig axes with split axis shrunk to S//p].
     # Place the source axis just before the payload's concat content and
     # merge: concatenation along concat_axis is source-major, matching the
@@ -173,41 +186,83 @@ def factorized_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
                        + sh[concat_axis + 2:])
 
 
-def direct_all_to_all_tiled(x, axis_names, split_axis, concat_axis):
+def _direct_tiled_impl(x, axis_names, split_axis, concat_axis):
     """Direct tiled collective over the product communicator (baseline)."""
     axis_names = _as_tuple(axis_names)
     return lax.all_to_all(x, tuple(reversed(axis_names)), split_axis,
                           concat_axis, tiled=True)
 
 
+# ---------------------------------------------------------------------------
+# Deprecated free-function shims.
+#
+# The public entry points below predate ``core.plan``; they now build (or
+# fetch from the LRU registry) an ``A2APlan`` per call and delegate, so
+# they stay bit-exact with plan execution while existing external callers
+# keep working.  Internal code must construct plans directly — CI errors
+# on DeprecationWarning raised from ``repro.*`` call sites.
+# ---------------------------------------------------------------------------
+
+
+def direct_all_to_all(x, axis_names):
+    """Deprecated: use ``plan_all_to_all(..., backend="direct").forward``."""
+    _warn_deprecated("direct_all_to_all", "plan.forward")
+    from .plan import plan_all_to_all
+    names = _as_tuple(axis_names)
+    plan = plan_all_to_all(_axis_sizes(names), names, x.shape[1:], x.dtype,
+                           backend="direct")
+    return plan.forward(x)
+
+
+def factorized_all_to_all(x, axis_names, *, variant: Variant = "natural",
+                          round_order=None):
+    """Deprecated: use ``plan_all_to_all(..., backend="factorized")
+    .forward``."""
+    _warn_deprecated("factorized_all_to_all", "plan.forward")
+    from .plan import plan_all_to_all
+    names = _as_tuple(axis_names)
+    plan = plan_all_to_all(_axis_sizes(names), names, x.shape[1:], x.dtype,
+                           backend="factorized", variant=variant,
+                           round_order=round_order)
+    return plan.forward(x)
+
+
+def factorized_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
+                                variant: Variant = "natural",
+                                round_order=None):
+    """Deprecated: use ``plan_all_to_all(..., backend="factorized")
+    .tiled``."""
+    _warn_deprecated("factorized_all_to_all_tiled", "plan.tiled")
+    from .plan import plan_all_to_all
+    names = _as_tuple(axis_names)
+    plan = plan_all_to_all(_axis_sizes(names), names, None, x.dtype,
+                           backend="factorized", variant=variant,
+                           round_order=round_order)
+    return plan.tiled(x, split_axis, concat_axis)
+
+
+def direct_all_to_all_tiled(x, axis_names, split_axis, concat_axis):
+    """Deprecated: use ``plan_all_to_all(..., backend="direct").tiled``."""
+    _warn_deprecated("direct_all_to_all_tiled", "plan.tiled")
+    from .plan import plan_all_to_all
+    names = _as_tuple(axis_names)
+    plan = plan_all_to_all(_axis_sizes(names), names, None, x.dtype,
+                           backend="direct")
+    return plan.tiled(x, split_axis, concat_axis)
+
+
 def host_alltoall(mesh: Mesh, axis_names, *, variant: Variant = "natural",
                   round_order=None, backend="factorized", n_chunks: int = 2):
-    """Host-level jitted all-to-all over a global ``(p, p, *block)`` operand.
+    """Deprecated: use ``plan_all_to_all(mesh, ...).host_fn()``.
 
+    Host-level jitted all-to-all over a global ``(p, p, *block)`` operand:
     ``x[r, i]`` is rank r's block for rank i; result ``y[r, i]`` is the
     block rank r received from rank i.  The rank axis is sharded over the
     torus axes (most significant digit first, matching the convention).
-    ``backend``: "factorized" | "direct" | "overlap" (chunk-pipelined
-    rounds, ``n_chunks`` payload chunks; see ``core.overlap``).
     """
-    axis_names = _as_tuple(axis_names)
-    spec = P(tuple(reversed(axis_names)))
-
-    def local(x):  # x: (1, p, *block) per device
-        blocks = x[0]
-        if backend == "factorized":
-            out = factorized_all_to_all(blocks, axis_names, variant=variant,
-                                        round_order=round_order)
-        elif backend == "direct":
-            out = direct_all_to_all(blocks, axis_names)
-        elif backend in ("overlap", "pipelined"):
-            from .overlap import overlapped_all_to_all
-            out = overlapped_all_to_all(blocks, axis_names,
-                                        n_chunks=n_chunks, variant=variant,
-                                        round_order=round_order)
-        else:
-            raise ValueError(backend)
-        return out[None]
-
-    fn = jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
-    return jax.jit(fn)
+    _warn_deprecated("host_alltoall", "plan.host_fn()")
+    from .plan import plan_all_to_all
+    plan = plan_all_to_all(mesh, axis_names, backend=backend,
+                           variant=variant, round_order=round_order,
+                           n_chunks=max(1, n_chunks))
+    return plan.host_fn(mesh)

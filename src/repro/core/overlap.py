@@ -45,8 +45,9 @@ from jax import lax
 from .factorized import (
     _as_tuple,
     _axis_sizes,
+    _factorized_impl,
     _skip_trivial,
-    factorized_all_to_all,
+    _warn_deprecated,
 )
 
 
@@ -151,11 +152,11 @@ def _split_chunks(x, axis, n_chunks):
 # The overlapped all-to-all
 # ---------------------------------------------------------------------------
 
-def overlapped_all_to_all(x, axis_names, *, n_chunks: int = 2,
-                          variant: str = "natural", round_order=None,
-                          compute_fn: Callable | None = None,
-                          reverse: bool = False, reverse_round_order=None,
-                          chunk_axis: int | None = None):
+def _overlapped_impl(x, axis_names, *, n_chunks: int = 2,
+                     variant: str = "natural", round_order=None,
+                     compute_fn: Callable | None = None,
+                     reverse: bool = False, reverse_round_order=None,
+                     chunk_axis: int | None = None):
     """Chunked, software-pipelined factorized all-to-all with an optional
     per-chunk compute stage and reverse (combine) all-to-all.
 
@@ -197,8 +198,8 @@ def overlapped_all_to_all(x, axis_names, *, n_chunks: int = 2,
     # Fast path: nothing to pipeline and nothing to interleave.
     if compute_fn is None and not reverse:
         if d <= 1 or n_chunks <= 1 or x.ndim == 1:
-            return factorized_all_to_all(x, axis_names, variant=variant,
-                                         round_order=round_order)
+            return _factorized_impl(x, axis_names, variant=variant,
+                                    round_order=round_order)
 
     # ---- chunking ----
     if chunk_axis is None:
@@ -239,13 +240,13 @@ def overlapped_all_to_all(x, axis_names, *, n_chunks: int = 2,
         jnp.concatenate(outs, axis=chunk_axis)
 
 
-def overlapped_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
-                                n_chunks: int = 2, variant: str = "natural",
-                                round_order=None):
+def _overlapped_tiled_impl(x, axis_names, split_axis, concat_axis, *,
+                           n_chunks: int = 2, variant: str = "natural",
+                           round_order=None):
     """Tiled-semantics overlapped all-to-all.
 
     Drop-in for ``lax.all_to_all(..., tiled=True)`` /
-    ``factorized_all_to_all_tiled`` — the MoE-dispatch and Ulysses re-shard
+    ``_factorized_tiled_impl`` — the MoE-dispatch and Ulysses re-shard
     form — with the payload chunked and the per-dimension rounds of
     different chunks interleaved in program order.
     """
@@ -260,8 +261,8 @@ def overlapped_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
     shape = x.shape
     xb = x.reshape(shape[:split_axis] + (p, S // p) + shape[split_axis + 1:])
     xb = jnp.moveaxis(xb, split_axis, 0)
-    out = overlapped_all_to_all(xb, axis_names, n_chunks=n_chunks,
-                                variant=variant, round_order=round_order)
+    out = _overlapped_impl(xb, axis_names, n_chunks=n_chunks,
+                           variant=variant, round_order=round_order)
     out = jnp.moveaxis(out, 0, concat_axis)
     sh = out.shape
     return out.reshape(sh[:concat_axis]
@@ -269,13 +270,57 @@ def overlapped_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
                        + sh[concat_axis + 2:])
 
 
+# ---------------------------------------------------------------------------
+# Deprecated free-function shims (see core.factorized for the policy): each
+# builds-or-fetches an A2APlan and delegates, staying bit-exact with plan
+# execution.  Internal call sites must use plans directly.
+# ---------------------------------------------------------------------------
+
+
+def overlapped_all_to_all(x, axis_names, *, n_chunks: int = 2,
+                          variant: str = "natural", round_order=None,
+                          compute_fn: Callable | None = None,
+                          reverse: bool = False, reverse_round_order=None,
+                          chunk_axis: int | None = None):
+    """Deprecated: use ``plan_all_to_all(..., backend="overlap")
+    .overlap`` (or ``.forward`` when there is no compute stage)."""
+    _warn_deprecated("overlapped_all_to_all", "plan.overlap")
+    from .plan import plan_all_to_all
+    names = _as_tuple(axis_names)
+    plan = plan_all_to_all(_axis_sizes(names), names, x.shape[1:], x.dtype,
+                           backend="overlap", variant=variant,
+                           round_order=round_order,
+                           reverse_round_order=reverse_round_order,
+                           n_chunks=max(1, n_chunks))
+    if compute_fn is None and not reverse:
+        return plan.forward(x)
+    return plan.overlap(x, compute_fn, reverse=reverse,
+                        chunk_axis=chunk_axis)
+
+
+def overlapped_all_to_all_tiled(x, axis_names, split_axis, concat_axis, *,
+                                n_chunks: int = 2, variant: str = "natural",
+                                round_order=None):
+    """Deprecated: use ``plan_all_to_all(..., backend="overlap").tiled``."""
+    _warn_deprecated("overlapped_all_to_all_tiled", "plan.tiled")
+    from .plan import plan_all_to_all
+    names = _as_tuple(axis_names)
+    plan = plan_all_to_all(_axis_sizes(names), names, None, x.dtype,
+                           backend="overlap", variant=variant,
+                           round_order=round_order,
+                           n_chunks=max(1, n_chunks))
+    return plan.tiled(x, split_axis, concat_axis)
+
+
 def pipelined_all_to_all(x, axis_names, *, n_chunks: int = 2,
                          variant: str = "natural", round_order=None):
-    """Chunk-interleaved factorized all-to-all (no compute stage).
-
-    The original ``core.pipelined`` entry point, now a thin specialization
-    of the overlap engine; gains ``round_order`` support.  Result identical
-    to ``factorized_all_to_all``.
-    """
-    return overlapped_all_to_all(x, axis_names, n_chunks=n_chunks,
-                                 variant=variant, round_order=round_order)
+    """Deprecated: use ``plan_all_to_all(..., backend="pipelined")
+    .forward`` — the chunk-interleaved schedule with no compute stage."""
+    _warn_deprecated("pipelined_all_to_all", "plan.forward")
+    from .plan import plan_all_to_all
+    names = _as_tuple(axis_names)
+    plan = plan_all_to_all(_axis_sizes(names), names, x.shape[1:], x.dtype,
+                           backend="pipelined", variant=variant,
+                           round_order=round_order,
+                           n_chunks=max(1, n_chunks))
+    return plan.forward(x)

@@ -1,0 +1,405 @@
+"""A2APlan — the cached, compiled plan-object API for every all-to-all.
+
+The paper's central engineering lesson is that the expensive setup —
+factorizing ``p`` into torus dimensions, building the ``d``-dimensional
+Cartesian communicators, and picking the per-round datatypes — is done
+**once, cached, and reused** across all-to-all calls (Listings 1–2 plus
+the §5 tuning conclusion).  ``plan_all_to_all`` is that setup step for
+this repo: it resolves, exactly once per ``(devices, axes, shape, dtype,
+knobs)`` key,
+
+* the torus factorization (``core.cache.get_factorization``, keyed by the
+  stable ``(device.id, platform)`` fingerprint when a ``Mesh`` is given),
+* the backend — ``direct`` | ``factorized`` | ``pipelined`` | ``overlap``,
+  either requested explicitly or chosen by the alpha-beta cost model
+  (``backend="tuned"`` → ``tuning.choose_algorithm``/``choose_chunks``),
+* the per-round peer-axis sequence (forward and reverse/drain orders) and
+  the payload chunk count,
+
+and returns an :class:`A2APlan` whose methods — ``forward``, ``reverse``,
+``tiled``, ``overlap`` — are the single execution surface every internal
+consumer (MoE dispatch/combine, Ulysses re-shards, benchmarks, device
+scripts) goes through.  Plans are cached in a bounded LRU registry, so
+repeated calls with the same key return the same object: the analogue of
+MPI's communicator attribute caching, measured in
+``benchmarks/alltoall_cmp.py``'s plan-reuse column.
+
+Execution methods must run inside ``jax.shard_map`` over the torus axes
+(they lower to per-axis collectives); construction runs anywhere — at
+trace time, at module setup, or from the legacy free-function shims in
+``core.factorized`` / ``core.overlap`` (which now just build-or-fetch a
+plan and warn).
+
+``plan.describe()`` returns a stable dict (dims, backend, predicted cost,
+chunks, cache hit/miss) for logging, goldens, and the dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .cache import (
+    LRUCache,
+    TorusFactorization,
+    device_fingerprint,
+    get_factorization,
+)
+from .factorized import (
+    _as_tuple,
+    _direct_impl,
+    _direct_tiled_impl,
+    _factorized_impl,
+    _factorized_tiled_impl,
+    _skip_trivial,
+)
+from .overlap import _check_order, _overlapped_impl, _overlapped_tiled_impl
+from .tuning import (
+    DCN,
+    ICI,
+    LinkModel,
+    Schedule,
+    choose_algorithm,
+    predict_direct,
+    predict_factorized,
+    predict_overlapped,
+)
+
+BACKENDS = ("tuned", "direct", "factorized", "pipelined", "overlap")
+
+# Mesh axes that cross the slow inter-pod network; everything else is
+# priced as ICI.  Overridable per plan via ``links=``.
+DCN_AXES = ("pod",)
+
+
+def default_links(axis_names) -> tuple[LinkModel, ...]:
+    """Per-axis link models: DCN for inter-pod axes, ICI otherwise."""
+    return tuple(DCN if a in DCN_AXES else ICI for a in axis_names)
+
+
+class A2APlan:
+    """A resolved, reusable all-to-all execution plan.
+
+    Construct via :func:`plan_all_to_all`; never directly.  All resolution
+    (factorization, backend, chunk count, round orders, predicted cost)
+    happens at construction; the execution methods only replay the chosen
+    kernel.  Plans are plain static Python objects — closing over one
+    inside ``shard_map``/``jit`` is free.
+    """
+
+    def __init__(self, fact: TorusFactorization, *, requested_backend: str,
+                 backend: str, variant: str, order: tuple[int, ...],
+                 rev_order: tuple[int, ...], n_chunks: int,
+                 block_shape: tuple[int, ...] | None, dtype,
+                 links: tuple[LinkModel, ...], schedule: Schedule | None,
+                 mesh: Mesh | None):
+        self.fact = fact
+        self.requested_backend = requested_backend
+        self.backend = backend
+        self.variant = variant
+        self.order = order
+        self.rev_order = rev_order
+        self.n_chunks = n_chunks
+        self.block_shape = block_shape
+        self.dtype = dtype
+        self.links = links
+        self.schedule = schedule
+        self._mesh = mesh
+        self._from_cache = False
+        self._fetches = 1
+        self._host_fns: dict[Mesh, object] = {}
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self.fact.axis_names
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.fact.dims
+
+    @property
+    def p(self) -> int:
+        return self.fact.p
+
+    @property
+    def d(self) -> int:
+        return self.fact.d
+
+    @property
+    def block_bytes(self) -> int | None:
+        if self.block_shape is None or self.dtype is None:
+            return None
+        return math.prod(self.block_shape) * jnp.dtype(self.dtype).itemsize
+
+    # -- execution surface (inside shard_map) ------------------------------
+
+    def forward(self, x):
+        """Blockwise all-to-all: ``x`` is ``(p, *block)``, block ``i``
+        destined for torus rank ``i``; returns ``out[i]`` = block received
+        from rank ``i``."""
+        return self._run(x, self.order)
+
+    def reverse(self, x):
+        """The combine-direction all-to-all: same semantics as ``forward``
+        but rounds run in the drain order (``rev_order``), so a
+        forward+reverse pair fills and empties the dimension links in
+        opposite sequence.  Bit-identical to ``forward`` for any order —
+        the collective is pure data movement and rounds commute."""
+        return self._run(x, self.rev_order)
+
+    def _run(self, x, order):
+        if self.backend == "direct":
+            return _direct_impl(x, self.axis_names)
+        if self.backend == "factorized":
+            return _factorized_impl(x, self.axis_names, variant=self.variant,
+                                    round_order=order)
+        return _overlapped_impl(x, self.axis_names, n_chunks=self.n_chunks,
+                                variant=self.variant, round_order=order)
+
+    def tiled(self, x, split_axis: int, concat_axis: int, *,
+              reverse: bool = False):
+        """Tiled-semantics all-to-all — drop-in for ``lax.all_to_all(x,
+        reversed(axis_names), split_axis, concat_axis, tiled=True)``; the
+        MoE-dispatch and Ulysses re-shard form."""
+        order = self.rev_order if reverse else self.order
+        if self.backend == "direct":
+            return _direct_tiled_impl(x, self.axis_names, split_axis,
+                                      concat_axis)
+        if self.backend == "factorized":
+            return _factorized_tiled_impl(x, self.axis_names, split_axis,
+                                          concat_axis, variant=self.variant,
+                                          round_order=order)
+        return _overlapped_tiled_impl(x, self.axis_names, split_axis,
+                                      concat_axis, n_chunks=self.n_chunks,
+                                      variant=self.variant,
+                                      round_order=order)
+
+    def overlap(self, x, compute_fn: Callable | None = None, *,
+                reverse: bool = True, chunk_axis: int | None = None):
+        """Fused forward / per-chunk compute / reverse pipeline
+        (``core.overlap``): chunk ``c``'s forward rounds are emitted next
+        to chunk ``c-1``'s compute and chunk ``c-2``'s reverse rounds.
+        Bit-exact with ``reverse(compute_fn(forward(x)))`` since chunks
+        never interact."""
+        return _overlapped_impl(x, self.axis_names, n_chunks=self.n_chunks,
+                                variant=self.variant, round_order=self.order,
+                                compute_fn=compute_fn, reverse=reverse,
+                                reverse_round_order=self.rev_order,
+                                chunk_axis=chunk_axis)
+
+    # -- host-level convenience -------------------------------------------
+
+    def host_fn(self, mesh: Mesh | None = None):
+        """Jitted host-level all-to-all over a global ``(p, p, *block)``
+        operand (``x[r, i]`` = rank r's block for rank i), the benchmark
+        harness form.  The jitted callable is cached on the plan keyed by
+        mesh *value* (Mesh is hashable), so plan reuse amortizes
+        retracing even when the caller rebuilds an equal Mesh."""
+        mesh = self._mesh if mesh is None else mesh
+        if mesh is None:
+            raise ValueError("plan was built without a Mesh; pass one")
+        if mesh not in self._host_fns:
+            import jax
+            spec = P(tuple(reversed(self.axis_names)))
+
+            def local(x):   # x: (1, p, *block) per device
+                return self.forward(x[0])[None]
+
+            self._host_fns[mesh] = jax.jit(jax.shard_map(
+                local, mesh=mesh, in_specs=spec, out_specs=spec))
+        return self._host_fns[mesh]
+
+    # -- introspection -----------------------------------------------------
+
+    def describe(self) -> dict:
+        """Stable, JSON-serializable summary of the resolved plan."""
+        sched = self.schedule
+        return {
+            "axis_names": list(self.axis_names),
+            "dims": list(self.dims),
+            "p": self.p,
+            "d": self.d,
+            "backend": self.backend,
+            "requested_backend": self.requested_backend,
+            "variant": self.variant,
+            "round_order": list(self.order),
+            "reverse_round_order": list(self.rev_order),
+            "n_chunks": self.n_chunks,
+            "block_shape": None if self.block_shape is None
+            else list(self.block_shape),
+            "dtype": None if self.dtype is None
+            else jnp.dtype(self.dtype).name,
+            "block_bytes": self.block_bytes,
+            "predicted_seconds": None if sched is None
+            else sched.predicted_seconds,
+            "blocks_sent_per_device": self.fact.blocks_sent_per_device(),
+            "links": [{"alpha": l.alpha, "bandwidth": l.bandwidth}
+                      for l in self.links],
+            "cache": "hit" if self._from_cache else "miss",
+        }
+
+    def __repr__(self):
+        return (f"A2APlan(dims={self.dims}, axes={self.axis_names}, "
+                f"backend={self.backend!r}, n_chunks={self.n_chunks}, "
+                f"variant={self.variant!r})")
+
+
+# ---------------------------------------------------------------------------
+# Construction + the plan registry
+# ---------------------------------------------------------------------------
+
+_PLANS: LRUCache = LRUCache(capacity=256)
+
+
+def _resolve(dims, axis_names, block_shape, dtype, requested_backend,
+             variant, round_order, reverse_round_order, n_chunks,
+             max_chunks, links, compute_seconds):
+    """All the once-per-plan decisions, in one place."""
+    if requested_backend not in BACKENDS:
+        raise ValueError(f"unknown a2a backend {requested_backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if variant not in ("natural", "paper"):
+        raise ValueError(f"unknown variant {variant!r}")
+    links = default_links(axis_names) if links is None else tuple(links)
+    if len(links) != len(dims):
+        raise ValueError(f"{len(links)} links for {len(dims)} dims")
+
+    # Round orders act on the *active* (size > 1) dimensions, matching the
+    # kernels' skip-trivial semantics; validated here, at plan time.
+    _, active = _skip_trivial(axis_names, dims)
+    d_active = len(active)
+    order = _check_order(round_order, d_active)
+    rev_order = (tuple(reversed(order)) if reverse_round_order is None
+                 else _check_order(reverse_round_order, d_active))
+
+    p = math.prod(dims)
+    block_bytes = None
+    if block_shape is not None and dtype is not None:
+        block_bytes = math.prod(block_shape) * jnp.dtype(dtype).itemsize
+
+    if requested_backend == "tuned":
+        if block_bytes is None:
+            raise ValueError('backend="tuned" needs block_shape and dtype '
+                             "for the cost model")
+        sched = choose_algorithm(dims, links, float(block_bytes),
+                                 max_chunks=max_chunks,
+                                 compute_seconds=compute_seconds)
+        backend = sched.kind
+        n = n_chunks or sched.n_chunks
+        return backend, order, rev_order, max(1, n), links, sched
+
+    backend = requested_backend
+    n = n_chunks or (2 if backend in ("overlap", "pipelined") else 1)
+    n = max(1, n)
+    sched = None
+    if block_bytes is not None:
+        if backend == "direct":
+            slowest = min(links, key=lambda l: l.bandwidth)
+            t = predict_direct(p, float(block_bytes), slowest) \
+                + compute_seconds
+        elif backend == "factorized":
+            t = predict_factorized(dims, links, float(block_bytes), p) \
+                + compute_seconds
+        else:
+            t = predict_overlapped(dims, links, float(block_bytes), p, n,
+                                   compute_seconds)
+        sched = Schedule(backend, dims, links, t, n_chunks=n)
+    return backend, order, rev_order, n, links, sched
+
+
+def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
+                    dtype=None, *, backend: str = "tuned",
+                    variant: str = "natural", round_order=None,
+                    reverse_round_order=None, n_chunks: int = 0,
+                    max_chunks: int = 8, links=None,
+                    compute_seconds: float = 0.0) -> A2APlan:
+    """Build (or fetch from the LRU registry) an :class:`A2APlan`.
+
+    Args:
+      mesh_or_axis_dims: a ``Mesh`` (the torus axes are looked up on it and
+        the plan is keyed by the stable device fingerprint) or an explicit
+        tuple of per-axis sizes, fastest digit first (device-agnostic key —
+        the inside-``shard_map`` shim path).
+      axis_names: torus dimensions, fastest digit first.
+      block_shape, dtype: shape/dtype of one per-rank block — feeds the
+        alpha-beta cost model.  Optional unless ``backend="tuned"``.
+      backend: "tuned" (cost-model choice) or an explicit kernel:
+        "direct" | "factorized" | "pipelined" | "overlap".
+      variant: per-round formulation, "natural" (zero-copy) or "paper".
+      round_order / reverse_round_order: permutations of the active rounds
+        (default: identity, and its reversal for the drain direction).
+      n_chunks: payload chunks for the overlap engine; 0 = resolve (cost
+        model under "tuned", else 2).
+      max_chunks: search bound for the tuned chunk count.
+      links: per-axis :class:`LinkModel` overrides (default: DCN for
+        ``pod``-like axes, ICI otherwise).
+      compute_seconds: per-call interleaved compute estimate for tuning.
+    """
+    axis_names = _as_tuple(axis_names)
+    mesh = None
+    if isinstance(mesh_or_axis_dims, Mesh):
+        mesh = mesh_or_axis_dims
+        fact = get_factorization(mesh, axis_names, variant=variant)
+        dims = fact.dims
+        dev_key = device_fingerprint(mesh)
+    else:
+        dims = tuple(int(s) for s in mesh_or_axis_dims)
+        if len(dims) != len(axis_names):
+            raise ValueError(f"{len(dims)} dims for {len(axis_names)} axes")
+        fact = TorusFactorization(axis_names, dims, variant)
+        dev_key = None
+
+    links_key = None if links is None else tuple(links)
+    key = (dev_key, dims, axis_names, None if block_shape is None
+           else tuple(block_shape),
+           None if dtype is None else jnp.dtype(dtype).name,
+           backend, variant,
+           None if round_order is None else tuple(round_order),
+           None if reverse_round_order is None
+           else tuple(reverse_round_order),
+           int(n_chunks), int(max_chunks), links_key,
+           float(compute_seconds))
+    cached = _PLANS.get(key)
+    if cached is not None:
+        cached._from_cache = True
+        cached._fetches += 1
+        return cached
+
+    resolved, order, rev_order, n, link_models, sched = _resolve(
+        dims, axis_names, block_shape, dtype, backend, variant, round_order,
+        reverse_round_order, n_chunks, max_chunks, links, compute_seconds)
+    plan = A2APlan(fact, requested_backend=backend, backend=resolved,
+                   variant=variant, order=order, rev_order=rev_order,
+                   n_chunks=n, block_shape=None if block_shape is None
+                   else tuple(block_shape), dtype=dtype, links=link_models,
+                   schedule=sched, mesh=mesh)
+    _PLANS.put(key, plan)
+    return plan
+
+
+def free_plans() -> None:
+    """Evict every cached plan (the registry-wide delete callback)."""
+    _PLANS.clear()
+
+
+def set_plan_cache_capacity(capacity: int) -> None:
+    """Bound the plan registry (evicting LRU entries if needed)."""
+    _PLANS.set_capacity(capacity)
+
+
+def plan_cache_stats() -> dict[str, int]:
+    out = dict(_PLANS.stats)
+    out["size"] = len(_PLANS)
+    out["capacity"] = _PLANS.capacity
+    return out
+
+
+def plan_cache_entries() -> list[A2APlan]:
+    """Snapshot of the live plans, LRU-oldest first (for logging/artifacts;
+    does not touch recency or stats)."""
+    return _PLANS.values()

@@ -161,7 +161,7 @@ def choose_algorithm(axis_dims: tuple[int, ...],
     come from one consistent policy.  The flat per-round model is
     round-order invariant (each round's cost is independent), so the
     schedule keeps the given axis order; ``round_order`` remains an
-    empirical knob on ``factorized_all_to_all`` itself.
+    empirical knob on the plan (``plan_all_to_all(round_order=...)``).
     """
     p = math.prod(axis_dims)
     slowest = min(axis_links, key=lambda l: l.bandwidth)

@@ -35,6 +35,7 @@ from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, \
     input_specs
 from repro.core.hlo_inspect import (collective_bytes_by_stride,
                                     loop_aware_analysis, parse_hlo)
+from repro.core.plan import plan_cache_entries, plan_cache_stats
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, make_serve_step, make_train_step
 from repro.models.common import abstract_params
@@ -179,6 +180,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     rules = rules or ShardingRules()
     model = build_model(cfg)
     t0 = time.time()
+    plans_before = {id(pl) for pl in plan_cache_entries()}
 
     p_abs = abstract_params(model.specs(), cfg.pdtype, mesh, rules)
 
@@ -217,6 +219,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older JAX: one dict per module
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     rep = parse_hlo(text)
     # Loop-aware accounting: while (scan) bodies weighted by trip count —
@@ -248,6 +252,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         "memory_analysis": _mem_dict(mem),
         "params_total": model_param_count(model),
         "params_active": active_param_count(cfg),
+        # A2APlans resolved while tracing this cell (MoE dispatch/combine,
+        # Ulysses re-shards): the introspectable record of which backend /
+        # chunk count / round order the cost model chose per collective.
+        "a2a_plans": [pl.describe() for pl in plan_cache_entries()
+                      if id(pl) not in plans_before],
+        "a2a_plan_cache": plan_cache_stats(),
     }
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "

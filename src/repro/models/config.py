@@ -83,7 +83,11 @@ class ModelConfig:
     # tuned | factorized | direct | pipelined | overlap
     # "overlap" pipelines dispatch-round / expert-FFN / combine-round per
     # payload chunk (core.overlap); "tuned" picks backend AND chunk count
-    # from the alpha-beta model (tuning.choose_algorithm).
+    # from the alpha-beta model (tuning.choose_algorithm).  These three
+    # knobs parameterize A2APlan construction (core.plan.plan_all_to_all)
+    # in one place per consumer — moe.moe_a2a_plan and ulysses — and are
+    # resolved once per (devices, axes, shape, dtype) plan key; nothing
+    # dispatches on these strings at call time.
     a2a_backend: str = "tuned"
     a2a_chunks: int = 0               # payload chunks; 0 = cost-model auto
 

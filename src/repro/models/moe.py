@@ -11,7 +11,7 @@ Dispatch layout (capacity-based, GShard-style):
   ``E < G`` — tiling makes replica gradients sum automatically).
 * Each device scatters its top-k routed tokens into ``(G, E_loc, C, D)``
   composite blocks — *exactly* the paper's ``p``-block send buffer — and
-  one ``factorized_all_to_all`` per direction moves them: on the multi-pod
+  one ``A2APlan`` collective per direction moves them: on the multi-pod
   mesh this is the d=2 schedule (ICI "data" round, then DCN "pod" round),
   the paper's hierarchical decomposition.
 * Expert FFN runs as a grouped matmul (``kernels.expert_matmul``) with the
@@ -28,9 +28,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
-from repro.core.factorized import direct_all_to_all, factorized_all_to_all
-from repro.core.overlap import overlapped_all_to_all, pipelined_all_to_all
-from repro.core.tuning import DCN, ICI, choose_algorithm
+from repro.core.plan import plan_all_to_all
 from repro.kernels import ops as kops
 from repro.models.common import ParamSpec, silu, gelu
 from repro.parallel.sharding import ShardingRules, constrain, ep_axes, \
@@ -79,11 +77,28 @@ def _capacity(cfg: ModelConfig, n_tokens: int, n_slots: int) -> int:
     return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
 
 
+def moe_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int):
+    """The one A2APlan shared by dispatch and combine for this MoE layer.
+
+    Resolved once per (mesh devices, EP axes, block shape, dtype, config
+    knobs) and fetched from the plan registry on every later layer/step —
+    the paper's cached-communicator amortization.  ``cfg.a2a_backend``
+    parameterizes plan construction here and nowhere else.
+    """
+    if not axes or mesh is None:
+        return None
+    return plan_all_to_all(
+        mesh, axes, block_shape=(E_loc, C, cfg.d_model), dtype=cfg.cdtype,
+        backend=cfg.a2a_backend, variant=cfg.a2a_variant,
+        n_chunks=cfg.a2a_chunks, max_chunks=cfg.a2a_chunks or 4)
+
+
 def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
-               R, C, tp_axis, reduce_axes):
+               R, C, tp_axis, reduce_axes, plan=None):
     """Per-device MoE computation (runs inside shard_map, or standalone when
     there is no mesh).  x: (B_loc, S, D); w*: (1, E_loc, ...) local slices
-    of the virtual-expert arrays."""
+    of the virtual-expert arrays; ``plan`` is the resolved A2APlan (None
+    when there is no EP group)."""
     B, S, D = x.shape
     N = B * S
     E = cfg.n_experts
@@ -137,46 +152,24 @@ def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
             ye = jax.lax.psum(ye, tp_axis)
         return ye.reshape(E_loc, G, Cc, D).transpose(1, 0, 2, 3)
 
-    # ---- backend policy for the paper's collective: the §5 conclusion
-    # extended one level — direct vs factorized vs chunk-overlapped, and
-    # the chunk count, all priced by the same alpha-beta model with
-    # per-axis (ICI vs DCN) links. ----
-    backend = cfg.a2a_backend
-    n_chunks = cfg.a2a_chunks
-    if axes and backend == "tuned":
-        links = tuple(DCN if a == "pod" else ICI for a in axes)
-        sizes = tuple(jax.lax.axis_size(a) for a in axes)
-        sched = choose_algorithm(
-            sizes, links,
-            block_bytes=E_loc * C * D * jnp.dtype(cd).itemsize,
-            max_chunks=cfg.a2a_chunks or 4)
-        backend = sched.kind
-        n_chunks = n_chunks or sched.n_chunks
-
-    def a2a(blocks):
-        if not axes:
+    # ---- the paper's collective, through its resolved A2APlan: backend,
+    # chunk count, and round orders were all fixed once at plan time
+    # (tuning.choose_algorithm prices tuned|direct|factorized|overlap with
+    # per-axis ICI/DCN links); here we only replay the chosen kernel. ----
+    def a2a(blocks, reverse=False):
+        if plan is None:
             return blocks
         flat = blocks.reshape(G, -1)
-        if backend == "pipelined":
-            out = pipelined_all_to_all(flat, axes, n_chunks=n_chunks or 2,
-                                       variant=cfg.a2a_variant)
-        elif backend == "direct":
-            out = direct_all_to_all(flat, axes)
-        elif backend == "factorized":
-            out = factorized_all_to_all(flat, axes,
-                                        variant=cfg.a2a_variant)
-        else:
-            raise ValueError(f"unknown a2a_backend {backend!r}; expected "
-                             "tuned|factorized|direct|pipelined|overlap")
+        out = plan.reverse(flat) if reverse else plan.forward(flat)
         return out.reshape(blocks.shape)
 
-    if axes and backend == "overlap":
+    if plan is not None and plan.backend == "overlap":
         # dispatch-round / expert-FFN / combine-round pipelined per
         # capacity chunk: chunk c+1's rounds hide behind chunk c's FFN.
         # Each chunk's post-dispatch state keeps the "moe_recv" name so the
         # remat_policy="collectives" save list works unchanged.
-        back = overlapped_all_to_all(
-            disp, axes, n_chunks=n_chunks or 2, variant=cfg.a2a_variant,
+        back = plan.overlap(
+            disp,
             compute_fn=lambda chunk, c: expert_ffn(
                 checkpoint_name(chunk, "moe_recv"), c),
             reverse=True, chunk_axis=2)
@@ -185,7 +178,7 @@ def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
         recv = checkpoint_name(a2a(disp), "moe_recv")  # (G, E_loc, C, D)
         ye = expert_ffn(recv)
         # ---- reverse collective + combine ----
-        back = checkpoint_name(a2a(ye), "moe_back")
+        back = checkpoint_name(a2a(ye, reverse=True), "moe_back")
     pad = jnp.zeros((G, E_loc, 1, D), cd)
     backp = jnp.concatenate([back, pad], axis=2)       # dropped -> zeros
     yk = backp[v_idx, sub_idx, c_idx]                  # (N*k, D)
@@ -245,7 +238,8 @@ def moe_block(p, x, cfg: ModelConfig, mesh=None,
 
     inner = functools.partial(
         _moe_inner, cfg=cfg, axes=axes, G=G, E_loc=E_loc, R=R, C=C,
-        tp_axis=tp_axis, reduce_axes=reduce_axes)
+        tp_axis=tp_axis, reduce_axes=reduce_axes,
+        plan=moe_a2a_plan(cfg, mesh, axes, E_loc, C))
 
     y, aux = jax.shard_map(
         inner, mesh=mesh,

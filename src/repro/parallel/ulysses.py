@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.factorized import factorized_all_to_all_tiled
 from repro.core.overlap import run_pipelined
+from repro.core.plan import plan_all_to_all
 from repro.kernels import ops as kops
 from repro.parallel.sharding import resolve_spec
 
@@ -73,6 +73,15 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
     hq_loc = Hq // sp
     n_chunks = _overlap_chunks(cfg, Hkv, sp) if kv_a2a else 1
 
+    # One plan per (mesh devices, SP axes, tile shape, dtype), resolved
+    # once and fetched from the registry on every later layer/step.  The
+    # re-shard itself is always the factorized tiled kernel; the overlap
+    # knob chunks at KV-head-group granularity above it (run_pipelined).
+    plan = plan_all_to_all(mesh, axes,
+                           block_shape=(B, hq_loc, S // sp, hd),
+                           dtype=q.dtype, backend="factorized",
+                           variant=cfg.a2a_variant)
+
     def inner_overlap(ql, kl, vl):
         # Chunked seq<->heads re-shard (core.overlap): split the heads
         # into KV-group-aligned chunks and software-pipeline
@@ -91,9 +100,8 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
 
         def reshard(st, _c):
             q_, k_, v_ = st
-            return (factorized_all_to_all_tiled(q_, axes, 1, 2),
-                    factorized_all_to_all_tiled(k_, axes, 1, 2),
-                    factorized_all_to_all_tiled(v_, axes, 1, 2))
+            return (plan.tiled(q_, 1, 2), plan.tiled(k_, 1, 2),
+                    plan.tiled(v_, 1, 2))
 
         def attend(st, _c):
             qh, kh, vh = st
@@ -102,8 +110,7 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
                                   impl=cfg.attention_impl)
 
         def unshard(oh, _c):
-            return factorized_all_to_all_tiled(oh, axes, split_axis=2,
-                                               concat_axis=1)
+            return plan.tiled(oh, 2, 1, reverse=True)
 
         outs = run_pipelined(states, [reshard, attend, unshard])
         return jnp.concatenate(outs, axis=1)
@@ -112,11 +119,10 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
         if n_chunks > 1:
             return inner_overlap(ql, kl, vl)
         # ql: (B_loc, Hq, S_loc, hd) -> heads sharded, full seq
-        qh = factorized_all_to_all_tiled(ql, axes, split_axis=1,
-                                         concat_axis=2)
+        qh = plan.tiled(ql, split_axis=1, concat_axis=2)
         if kv_a2a:
-            kh = factorized_all_to_all_tiled(kl, axes, 1, 2)
-            vh = factorized_all_to_all_tiled(vl, axes, 1, 2)
+            kh = plan.tiled(kl, 1, 2)
+            vh = plan.tiled(vl, 1, 2)
         else:
             # GQA with Hkv < sp: gather full KV along seq, then select the
             # global KV heads matching this device's local q-head range so
@@ -132,8 +138,7 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
         oh = kops.attention(qh, kh, vh, causal=causal, window=cfg.window,
                             impl=cfg.attention_impl)
         # back: heads full, seq sharded
-        return factorized_all_to_all_tiled(oh, axes, split_axis=2,
-                                           concat_axis=1)
+        return plan.tiled(oh, 2, 1, reverse=True)
 
     return jax.shard_map(
         inner, mesh=mesh,

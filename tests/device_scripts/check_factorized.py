@@ -19,13 +19,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cache import cart_create
-from repro.core.factorized import (
-    direct_all_to_all,
-    direct_all_to_all_tiled,
-    factorized_all_to_all,
-    factorized_all_to_all_tiled,
-)
-from repro.core.pipelined import pipelined_all_to_all
+from repro.core.plan import plan_all_to_all
 
 
 def run_case(dims, names, variant, block=(3,), round_order=None, pipelined=0,
@@ -36,17 +30,20 @@ def run_case(dims, names, variant, block=(3,), round_order=None, pipelined=0,
     x = (jnp.arange(p)[:, None] * 1000 + jnp.arange(p)[None, :])
     x = (x[..., None] * jnp.ones(block)).astype(dtype)
 
+    if pipelined:
+        plan = plan_all_to_all(mesh, names, block, dtype,
+                               backend="pipelined", n_chunks=pipelined)
+    else:
+        plan = plan_all_to_all(mesh, names, block, dtype,
+                               backend="factorized", variant=variant,
+                               round_order=round_order)
+    plan_dir = plan_all_to_all(mesh, names, block, dtype, backend="direct")
+
     def loc(xl):
-        b = xl[0]
-        if pipelined:
-            out = pipelined_all_to_all(b, names, n_chunks=pipelined)
-        else:
-            out = factorized_all_to_all(b, names, variant=variant,
-                                        round_order=round_order)
-        return out[None]
+        return plan.forward(xl[0])[None]
 
     def loc_direct(xl):
-        return direct_all_to_all(xl[0], names)[None]
+        return plan_dir.forward(xl[0])[None]
 
     f = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=spec, out_specs=spec))
     g = jax.jit(jax.shard_map(loc_direct, mesh=mesh, in_specs=spec,
@@ -63,11 +60,14 @@ def run_tiled(dims, names, shape, split, concat):
     spec = P(tuple(reversed(names)), *([None] * (len(shape) - 1)))
     x = jax.random.normal(jax.random.PRNGKey(0), (p,) + shape)
 
+    plan = plan_all_to_all(mesh, names, backend="factorized")
+    plan_dir = plan_all_to_all(mesh, names, backend="direct")
+
     def loc(xl):
-        return factorized_all_to_all_tiled(xl[0], names, split, concat)[None]
+        return plan.tiled(xl[0], split, concat)[None]
 
     def locd(xl):
-        return direct_all_to_all_tiled(xl[0], names, split, concat)[None]
+        return plan_dir.tiled(xl[0], split, concat)[None]
 
     f = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=spec, out_specs=spec))
     g = jax.jit(jax.shard_map(locd, mesh=mesh, in_specs=spec, out_specs=spec))

@@ -25,16 +25,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.cache import cart_create
-from repro.core.factorized import (
-    direct_all_to_all,
-    direct_all_to_all_tiled,
-    factorized_all_to_all,
-)
 from repro.core.hlo_inspect import interleave_report
-from repro.core.overlap import (
-    overlapped_all_to_all,
-    overlapped_all_to_all_tiled,
-)
+from repro.core.plan import plan_all_to_all
 
 DIMS = [((2, 2), ("i", "j")), ((2, 3), ("i", "j")),
         ((2, 2, 2), ("i", "j", "k"))]
@@ -48,19 +40,25 @@ def _mesh_fns(dims, names, loc):
                                  out_specs=spec))
 
 
+def _plan(dims, names, backend, **kw):
+    mesh = cart_create(math.prod(dims), dims, names)
+    return plan_all_to_all(mesh, names, backend=backend, **kw)
+
+
 def run_parity(dims, names, variant, round_order, n_chunks, block=(6,)):
     p = math.prod(dims)
     x = (jnp.arange(p)[:, None] * 1000 + jnp.arange(p)[None, :])
     x = (x[..., None] * (1 + jnp.arange(math.prod(block))).reshape(block)
          ).astype(jnp.float32)
 
-    f_ovl = _mesh_fns(dims, names, lambda xl: overlapped_all_to_all(
-        xl[0], names, n_chunks=n_chunks, variant=variant,
-        round_order=round_order)[None])
-    f_fac = _mesh_fns(dims, names, lambda xl: factorized_all_to_all(
-        xl[0], names, variant=variant, round_order=round_order)[None])
-    f_dir = _mesh_fns(dims, names, lambda xl: direct_all_to_all(
-        xl[0], names)[None])
+    p_ovl = _plan(dims, names, "overlap", n_chunks=n_chunks,
+                  variant=variant, round_order=round_order)
+    p_fac = _plan(dims, names, "factorized", variant=variant,
+                  round_order=round_order)
+    p_dir = _plan(dims, names, "direct")
+    f_ovl = _mesh_fns(dims, names, lambda xl: p_ovl.forward(xl[0])[None])
+    f_fac = _mesh_fns(dims, names, lambda xl: p_fac.forward(xl[0])[None])
+    f_dir = _mesh_fns(dims, names, lambda xl: p_dir.forward(xl[0])[None])
 
     got, fac, ref = np.array(f_ovl(x)), np.array(f_fac(x)), np.array(f_dir(x))
     expected = np.array(x).transpose(1, 0, *range(2, x.ndim))
@@ -77,19 +75,16 @@ def run_compute_parity(dims, names, n_chunks, variant):
     def fn(chunk, _c):
         return chunk * 2.0 + 1.0      # elementwise => chunking-invariant
 
+    p_ovl = _plan(dims, names, "overlap", n_chunks=n_chunks,
+                  variant=variant)
+    p_fac = _plan(dims, names, "factorized", variant=variant)
+
     def loc(xl):
-        return overlapped_all_to_all(
-            xl[0], names, n_chunks=n_chunks, variant=variant,
-            compute_fn=fn, reverse=True, chunk_axis=2)[None]
+        return p_ovl.overlap(xl[0], fn, reverse=True, chunk_axis=2)[None]
 
     def loc_ref(xl):
-        a = factorized_all_to_all(xl[0], names, variant=variant)
-        b = fn(a, 0)
-        # reverse pass uses the drain-order schedule; rounds commute
-        return factorized_all_to_all(
-            b, names, variant=variant,
-            round_order=tuple(reversed(range(
-                len([s for s in dims if s > 1])))))[None]
+        # forward, compute, then the drain-order reverse; rounds commute
+        return p_fac.reverse(fn(p_fac.forward(xl[0]), 0))[None]
 
     f = _mesh_fns(dims, names, loc)
     g = _mesh_fns(dims, names, loc_ref)
@@ -102,12 +97,14 @@ def run_tiled(dims, names, shape, split, concat, n_chunks):
     spec = P(tuple(reversed(names)), *([None] * (len(shape) - 1)))
     x = jax.random.normal(jax.random.PRNGKey(1), (p,) + shape)
 
+    p_ovl = _plan(dims, names, "overlap", n_chunks=n_chunks)
+    p_dir = _plan(dims, names, "direct")
+
     def loc(xl):
-        return overlapped_all_to_all_tiled(xl[0], names, split, concat,
-                                           n_chunks=n_chunks)[None]
+        return p_ovl.tiled(xl[0], split, concat)[None]
 
     def locd(xl):
-        return direct_all_to_all_tiled(xl[0], names, split, concat)[None]
+        return p_dir.tiled(xl[0], split, concat)[None]
 
     f = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=spec, out_specs=spec))
     g = jax.jit(jax.shard_map(locd, mesh=mesh, in_specs=spec,

@@ -1,0 +1,186 @@
+"""A2APlan equivalence suite (12 CPU devices).
+
+Asserts, for every backend x variant x round order (plus tiled and the
+fused overlap form):
+
+* ``A2APlan.forward`` / ``reverse`` / ``tiled`` are bit-exact with the
+  legacy free functions (``factorized_all_to_all`` & co.), which are now
+  deprecation shims delegating back through plans — the acceptance
+  criterion that external callers see identical results.
+* every legacy free function emits exactly one ``DeprecationWarning``
+  per call site while the plan path emits none.
+* repeated plan construction hits the LRU registry (cache amortization).
+
+Exits nonzero on any failure.
+"""
+
+import itertools
+import math
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import factorized as legacy_f
+from repro.core import overlap as legacy_o
+from repro.core.cache import cart_create
+from repro.core.plan import free_plans, plan_all_to_all, plan_cache_stats
+
+BACKENDS = ("direct", "factorized", "pipelined", "overlap")
+DIMS = [((2, 2), ("i", "j")), ((3, 4), ("i", "j")),
+        ((2, 3, 2), ("i", "j", "k"))]
+
+
+def _jit(mesh, names, loc, extra_none=0):
+    spec = P(tuple(reversed(names)), *([None] * extra_none))
+    return jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=spec,
+                                 out_specs=spec))
+
+
+def _legacy_call(backend, x, names, variant, order, n_chunks):
+    if backend == "direct":
+        return legacy_f.direct_all_to_all(x, names)
+    if backend == "factorized":
+        return legacy_f.factorized_all_to_all(x, names, variant=variant,
+                                              round_order=order)
+    if backend == "pipelined":
+        return legacy_o.pipelined_all_to_all(x, names, n_chunks=n_chunks,
+                                             variant=variant,
+                                             round_order=order)
+    return legacy_o.overlapped_all_to_all(x, names, n_chunks=n_chunks,
+                                          variant=variant,
+                                          round_order=order)
+
+
+def run_forward_reverse(dims, names, backend, variant, order, n_chunks=2):
+    p = math.prod(dims)
+    mesh = cart_create(p, dims, names)
+    x = (jnp.arange(p)[:, None] * 977 + jnp.arange(p)[None, :])
+    x = (x[..., None] * (1 + jnp.arange(6))).astype(jnp.float32)
+
+    plan = plan_all_to_all(mesh, names, x.shape[2:], x.dtype,
+                           backend=backend, variant=variant,
+                           round_order=order, n_chunks=n_chunks)
+
+    with warnings.catch_warnings():
+        # the plan path must never touch the deprecation shims
+        warnings.simplefilter("error", DeprecationWarning)
+        f_fwd = _jit(mesh, names, lambda xl: plan.forward(xl[0])[None])
+        f_rev = _jit(mesh, names, lambda xl: plan.reverse(xl[0])[None])
+        got_fwd, got_rev = np.array(f_fwd(x)), np.array(f_rev(x))
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        f_leg = _jit(mesh, names, lambda xl: _legacy_call(
+            backend, xl[0], names, variant, order, n_chunks)[None])
+        ref = np.array(f_leg(x))
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught), \
+        f"legacy {backend} free function did not warn"
+
+    expected = np.array(x).transpose(1, 0, 2)
+    np.testing.assert_array_equal(ref, expected)
+    np.testing.assert_array_equal(got_fwd, expected)
+    # reverse runs rounds in drain order: same permutation, bit-exact
+    np.testing.assert_array_equal(got_rev, expected)
+
+
+def run_tiled(dims, names, backend, variant, order, shape=(24, 5),
+              split=0, concat=1, n_chunks=2):
+    p = math.prod(dims)
+    mesh = cart_create(p, dims, names)
+    x = jax.random.normal(jax.random.PRNGKey(3), (p,) + shape)
+
+    plan = plan_all_to_all(mesh, names, backend=backend, variant=variant,
+                           round_order=order, n_chunks=n_chunks)
+    f = _jit(mesh, names, lambda xl: plan.tiled(xl[0], split, concat)[None],
+             extra_none=len(shape) - 1)
+
+    def legacy(xl):
+        b = xl[0]
+        if backend == "direct":
+            return legacy_f.direct_all_to_all_tiled(b, names, split,
+                                                    concat)[None]
+        if backend == "factorized":
+            return legacy_f.factorized_all_to_all_tiled(
+                b, names, split, concat, variant=variant,
+                round_order=order)[None]
+        return legacy_o.overlapped_all_to_all_tiled(
+            b, names, split, concat, n_chunks=n_chunks, variant=variant,
+            round_order=order)[None]
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        g = _jit(mesh, names, legacy, extra_none=len(shape) - 1)
+        ref = np.array(g(x))
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    np.testing.assert_array_equal(np.array(f(x)), ref)
+
+
+def run_overlap_fused(dims, names, variant, n_chunks):
+    """plan.overlap(fwd/compute/reverse) == legacy overlapped_all_to_all
+    with compute_fn + reverse, bit-exact."""
+    p = math.prod(dims)
+    mesh = cart_create(p, dims, names)
+    x = jax.random.normal(jax.random.PRNGKey(5), (p, p, 4, 6))
+
+    def fn(chunk, _c):
+        return chunk * 0.5 - 3.0
+
+    plan = plan_all_to_all(mesh, names, x.shape[2:], x.dtype,
+                           backend="overlap", variant=variant,
+                           n_chunks=n_chunks)
+    f = _jit(mesh, names, lambda xl: plan.overlap(
+        xl[0], fn, reverse=True, chunk_axis=2)[None])
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        g = _jit(mesh, names, lambda xl: legacy_o.overlapped_all_to_all(
+            xl[0], names, n_chunks=n_chunks, variant=variant,
+            compute_fn=fn, reverse=True, chunk_axis=2)[None])
+        ref = np.array(g(x))
+    np.testing.assert_array_equal(np.array(f(x)), ref)
+
+
+def main():
+    assert jax.device_count() >= 12, \
+        f"need 12 devices, got {jax.device_count()}"
+    free_plans()
+
+    n = 0
+    for dims, names in DIMS:
+        d = len([s for s in dims if s > 1])
+        for backend in BACKENDS:
+            for variant in ("natural", "paper"):
+                for order in itertools.permutations(range(d)):
+                    run_forward_reverse(dims, names, backend, variant,
+                                        order)
+                    n += 1
+    print(f"OK plan forward/reverse == legacy free functions ({n} cases)")
+
+    n = 0
+    for dims, names in DIMS[:2]:
+        for backend in BACKENDS:
+            for variant in ("natural", "paper"):
+                run_tiled(dims, names, backend, variant, None)
+                n += 1
+    run_tiled(*DIMS[2], "factorized", "natural", (2, 1, 0),
+              shape=(4, 24, 3), split=1, concat=2)
+    print(f"OK plan tiled == legacy tiled ({n + 1} cases)")
+
+    for dims, names in DIMS:
+        for variant in ("natural", "paper"):
+            for n_chunks in (1, 2, 4):
+                run_overlap_fused(dims, names, variant, n_chunks)
+    print("OK plan fused overlap == legacy overlapped_all_to_all")
+
+    stats = plan_cache_stats()
+    assert stats["hits"] > 0, f"plan registry never hit: {stats}"
+    print(f"OK plan cache amortizes: {stats}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

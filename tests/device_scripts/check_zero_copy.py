@@ -22,17 +22,19 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cache import cart_create
-from repro.core.factorized import factorized_all_to_all
 from repro.core.hlo_inspect import parse_hlo
+from repro.core.plan import plan_all_to_all
 
 
 def compile_report(dims, names, variant, block=64):
     p = math.prod(dims)
     mesh = cart_create(p, dims, names)
     spec = P(tuple(reversed(names)))
+    plan = plan_all_to_all(mesh, names, (block,), jnp.float32,
+                           backend="factorized", variant=variant)
 
     def loc(xl):
-        return factorized_all_to_all(xl[0], names, variant=variant)[None]
+        return plan.forward(xl[0])[None]
 
     f = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=spec, out_specs=spec))
     x = jax.ShapeDtypeStruct((p, p, block), jnp.float32)

@@ -225,19 +225,22 @@ ENTRY %main (p0: f32[8]) -> f32[8] {
 class TestOverlapSingleDevice:
     def test_trivial_torus_applies_compute_stage(self):
         # p == 1 (all torus dims trivial): the engine degenerates to the
-        # compute stage alone, chunked.
+        # compute stage alone, chunked.  Runs through the A2APlan surface;
+        # the legacy shim parity lives in test_core_plan.py /
+        # device_scripts/check_plan.py.
         import jax
         import jax.numpy as jnp
         import numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
-        from repro.core.overlap import overlapped_all_to_all
+        from repro.core.plan import plan_all_to_all
 
         mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+        plan = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                               backend="overlap", n_chunks=2)
 
         def loc(xl):
-            return overlapped_all_to_all(
-                xl, ("x",), n_chunks=2,
-                compute_fn=lambda chunk, c: chunk * (c + 1.0))
+            return plan.overlap(
+                xl, lambda chunk, c: chunk * (c + 1.0), reverse=False)
 
         x = jnp.arange(8.0).reshape(1, 8)
         y = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=P("x"),

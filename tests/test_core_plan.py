@@ -1,0 +1,345 @@
+"""Device-free unit tests for the A2APlan API (core.plan): resolution,
+describe() golden dict, the LRU plan registry, the bounded factorization
+cache, and the deprecation shims.
+
+Multi-device bit-exactness of plan execution against the legacy free
+functions runs in ``tests/device_scripts/check_plan.py`` (see
+test_multidevice.py).
+"""
+
+import math
+import warnings
+
+import pytest
+
+from repro.core import cache as core_cache
+from repro.core import plan as core_plan
+from repro.core.cache import (
+    LRUCache,
+    cache_stats,
+    cart_create,
+    free_all,
+    get_factorization,
+    set_cache_capacity,
+)
+from repro.core.plan import (
+    A2APlan,
+    free_plans,
+    plan_all_to_all,
+    plan_cache_stats,
+    set_plan_cache_capacity,
+)
+from repro.core.tuning import DCN, ICI, choose_algorithm
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registries():
+    """Each test sees empty registries at default capacity and leaves the
+    module state the way it found it."""
+    free_plans()
+    free_all()
+    core_plan._PLANS.stats.update(hits=0, misses=0, evictions=0)
+    core_cache._REGISTRY.stats.update(hits=0, misses=0, evictions=0)
+    old_plan_cap = core_plan._PLANS.capacity
+    old_fact_cap = core_cache._REGISTRY.capacity
+    yield
+    set_plan_cache_capacity(old_plan_cap)
+    set_cache_capacity(old_fact_cap)
+    free_plans()
+    free_all()
+
+
+class TestLRUCache:
+    def test_eviction_order_and_stats(self):
+        c = LRUCache(capacity=2)
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.get("a") == 1          # refreshes "a"
+        c.put("c", 3)                   # evicts LRU "b"
+        assert c.get("b") is None
+        assert c.get("a") == 1 and c.get("c") == 3
+        assert c.stats == {"hits": 3, "misses": 1, "evictions": 1}
+
+    def test_set_capacity_shrinks(self):
+        c = LRUCache(capacity=8)
+        for i in range(8):
+            c.put(i, i)
+        c.set_capacity(3)
+        assert len(c) == 3
+        assert c.stats["evictions"] == 5
+
+    def test_evict_callback(self):
+        seen = []
+        c = LRUCache(capacity=1, on_evict=seen.append)
+        c.put("a", "va")
+        c.put("b", "vb")
+        assert seen == ["va"]
+
+
+class TestPlanResolution:
+    def test_explicit_backends(self):
+        for backend in ("direct", "factorized", "pipelined", "overlap"):
+            p = plan_all_to_all((2, 3), ("i", "j"), (8,), "float32",
+                                backend=backend)
+            assert p.backend == backend
+            assert p.requested_backend == backend
+        assert plan_all_to_all((2, 3), ("i", "j"), backend="overlap",
+                               n_chunks=0).n_chunks == 2
+        assert plan_all_to_all((2, 3), ("i", "j"), backend="factorized",
+                               ).n_chunks == 1
+
+    def test_tuned_matches_choose_algorithm(self):
+        dims, links = (16, 4), (ICI, DCN)
+        for bytes_ in (4.0, float(1 << 16), float(1 << 24)):
+            sched = choose_algorithm(dims, links, bytes_, max_chunks=8)
+            p = plan_all_to_all(dims, ("i", "j"), (int(bytes_),), "int8",
+                                backend="tuned", max_chunks=8, links=links)
+            assert p.backend == sched.kind
+            assert p.n_chunks == max(1, sched.n_chunks)
+            assert p.schedule.predicted_seconds == \
+                pytest.approx(sched.predicted_seconds)
+
+    def test_tuned_needs_cost_inputs(self):
+        with pytest.raises(ValueError, match="tuned"):
+            plan_all_to_all((2, 2), ("i", "j"), backend="tuned")
+
+    def test_round_order_validated_at_plan_time(self):
+        with pytest.raises(ValueError, match="permutation"):
+            plan_all_to_all((2, 3), ("i", "j"), backend="factorized",
+                            round_order=(0, 0))
+        # trivial (size-1) dims are skipped before validation
+        p = plan_all_to_all((2, 1, 3), ("i", "j", "k"),
+                            backend="factorized", round_order=(1, 0))
+        assert p.order == (1, 0) and p.rev_order == (0, 1)
+
+    def test_unknown_backend_and_variant(self):
+        with pytest.raises(ValueError, match="backend"):
+            plan_all_to_all((2, 2), ("i", "j"), backend="quantum")
+        with pytest.raises(ValueError, match="variant"):
+            plan_all_to_all((2, 2), ("i", "j"), backend="direct",
+                            variant="sideways")
+
+    def test_default_links_flag_pod_as_dcn(self):
+        p = plan_all_to_all((4, 2), ("data", "pod"), backend="factorized")
+        assert p.links == (ICI, DCN)
+
+
+class TestDescribeGolden:
+    def test_golden_dict(self):
+        p = plan_all_to_all((4, 2), ("i", "j"), (16, 8), "bfloat16",
+                            backend="overlap", variant="paper",
+                            round_order=(1, 0), n_chunks=3,
+                            links=(ICI, DCN))
+        d = p.describe()
+        pred = d.pop("predicted_seconds")
+        assert pred > 0
+        assert d == {
+            "axis_names": ["i", "j"],
+            "dims": [4, 2],
+            "p": 8,
+            "d": 2,
+            "backend": "overlap",
+            "requested_backend": "overlap",
+            "variant": "paper",
+            "round_order": [1, 0],
+            "reverse_round_order": [0, 1],
+            "n_chunks": 3,
+            "block_shape": [16, 8],
+            "dtype": "bfloat16",
+            "block_bytes": 256,
+            "blocks_sent_per_device": 2 * 8 - (2 + 4),   # Theorem 1
+            "links": [{"alpha": ICI.alpha, "bandwidth": ICI.bandwidth},
+                      {"alpha": DCN.alpha, "bandwidth": DCN.bandwidth}],
+            "cache": "miss",
+        }
+
+    def test_describe_is_json_serializable(self):
+        import json
+        p = plan_all_to_all((2, 2), ("i", "j"), (4,), "float32",
+                            backend="tuned")
+        json.dumps(p.describe())
+
+    def test_no_cost_inputs_yields_none_fields(self):
+        d = plan_all_to_all((2, 2), ("i", "j"),
+                            backend="factorized").describe()
+        assert d["block_shape"] is None and d["dtype"] is None
+        assert d["block_bytes"] is None and d["predicted_seconds"] is None
+
+
+class TestPlanRegistry:
+    def test_same_key_hits(self):
+        a = plan_all_to_all((2, 2), ("i", "j"), (8,), "float32",
+                            backend="tuned")
+        b = plan_all_to_all((2, 2), ("i", "j"), (8,), "float32",
+                            backend="tuned")
+        assert a is b
+        assert a.describe()["cache"] == "hit"
+        stats = plan_cache_stats()
+        assert stats["hits"] == 1 and stats["misses"] == 1
+
+    def test_distinct_keys_miss(self):
+        a = plan_all_to_all((2, 2), ("i", "j"), (8,), "float32",
+                            backend="direct")
+        b = plan_all_to_all((2, 2), ("i", "j"), (16,), "float32",
+                            backend="direct")
+        c = plan_all_to_all((2, 2), ("i", "j"), (8,), "int32",
+                            backend="direct")
+        assert a is not b and a is not c
+        assert plan_cache_stats()["size"] == 3
+
+    def test_registry_is_bounded(self):
+        set_plan_cache_capacity(4)
+        for k in range(20):
+            plan_all_to_all((2, 2), ("i", "j"), (k + 1,), "float32",
+                            backend="direct")
+        stats = plan_cache_stats()
+        assert stats["size"] <= 4
+        assert stats["evictions"] == 16
+        free_plans()
+        assert plan_cache_stats()["size"] == 0
+
+
+class TestFactorizationCacheBounded:
+    def test_mesh_rebuilds_do_not_grow_cache(self):
+        # The satellite regression: a serving loop that rebuilds its Mesh
+        # every step must not grow the registry — the (device.id,
+        # platform) fingerprint keys all rebuilds to one entry.
+        import jax
+        n = min(1, len(jax.devices()))
+        assert n == 1
+        before = cache_stats()["size"]
+        for _ in range(10):
+            mesh = cart_create(1, (1,), ("t0",))
+            get_factorization(mesh, ("t0",))
+        stats = cache_stats()
+        assert stats["size"] == before + 1
+        assert stats["hits"] >= 9
+
+    def test_capacity_bounds_distinct_entries(self):
+        set_cache_capacity(3)
+        mesh = cart_create(1, (1,), ("x",))
+        for v in range(8):
+            get_factorization(mesh, ("x",), variant=f"natural{v}")
+        stats = cache_stats()
+        assert stats["size"] <= 3
+        assert stats["evictions"] >= 5
+
+
+class TestShims:
+    """The legacy free functions delegate through plans and warn."""
+
+    def _single_device_mesh(self):
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.array(jax.devices()[:1]), ("x",))
+
+    def test_factorized_shim_warns_and_matches_plan(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.factorized import factorized_all_to_all
+
+        mesh = self._single_device_mesh()
+        x = jnp.arange(8.0).reshape(1, 8)
+        plan = plan_all_to_all(mesh, ("x",), (8,), x.dtype,
+                               backend="factorized")
+
+        def loc_plan(xl):
+            return plan.forward(xl)
+
+        def loc_shim(xl):
+            return factorized_all_to_all(xl, ("x",))
+
+        run = lambda loc: jax.jit(jax.shard_map(
+            loc, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        got_plan = np.array(run(loc_plan))
+        with pytest.warns(DeprecationWarning, match="plan_all_to_all"):
+            got_shim = np.array(run(loc_shim))
+        np.testing.assert_array_equal(got_plan, got_shim)
+        np.testing.assert_array_equal(got_plan, np.array(x))
+
+    def test_host_alltoall_shim_builds_plan(self):
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core.factorized import host_alltoall
+
+        mesh = self._single_device_mesh()
+        with pytest.warns(DeprecationWarning, match="host_fn"):
+            fn = host_alltoall(mesh, ("x",), backend="factorized")
+        x = jnp.arange(4.0).reshape(1, 1, 4)
+        np.testing.assert_array_equal(np.array(fn(x)), np.array(x))
+        assert plan_cache_stats()["misses"] >= 1
+
+    def test_every_shim_warns(self):
+        import jax.numpy as jnp
+        from repro.core import factorized as f
+        from repro.core import overlap as o
+
+        x = jnp.zeros((1, 4))
+        mesh = self._single_device_mesh()
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        shim_calls = [
+            lambda xl: f.direct_all_to_all(xl, ("x",)),
+            lambda xl: f.factorized_all_to_all(xl, ("x",)),
+            lambda xl: f.factorized_all_to_all_tiled(xl, ("x",), 0, 0),
+            lambda xl: f.direct_all_to_all_tiled(xl, ("x",), 0, 0),
+            lambda xl: o.overlapped_all_to_all(xl, ("x",)),
+            lambda xl: o.overlapped_all_to_all_tiled(xl, ("x",), 0, 0),
+            lambda xl: o.pipelined_all_to_all(xl, ("x",)),
+        ]
+        for call in shim_calls:
+            with pytest.warns(DeprecationWarning):
+                jax.jit(jax.shard_map(call, mesh=mesh, in_specs=P("x"),
+                                      out_specs=P("x")))(x)
+
+
+class TestPlanTrivialTorus:
+    def test_p1_forward_is_identity_and_overlap_computes(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+        plan = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                               backend="overlap", n_chunks=2)
+        x = jnp.arange(8.0).reshape(1, 8)
+
+        def loc(xl):
+            return plan.overlap(xl, lambda chunk, c: chunk * (c + 1.0),
+                                reverse=False)
+
+        y = jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=P("x"),
+                                  out_specs=P("x")))(x)
+        want = np.concatenate([np.arange(4.0), np.arange(4.0, 8.0) * 2.0])
+        np.testing.assert_allclose(np.array(y), want.reshape(1, 8))
+
+        def fwd(xl):
+            return plan.forward(xl)
+
+        z = jax.jit(jax.shard_map(fwd, mesh=mesh, in_specs=P("x"),
+                                  out_specs=P("x")))(x)
+        np.testing.assert_array_equal(np.array(z), np.array(x))
+
+
+class TestMoEPlanConstruction:
+    def test_config_parameterizes_plan(self):
+        from repro.models.config import ModelConfig
+        from repro.models.moe import moe_a2a_plan
+
+        mesh = cart_create(1, (1, 1), ("pod", "data"))
+        cfg = ModelConfig(name="t", family="moe", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=4, d_ff=64, vocab=64,
+                          n_experts=2, top_k=1, a2a_backend="factorized")
+        plan = moe_a2a_plan(cfg, mesh, ("data", "pod"), E_loc=2, C=8)
+        assert isinstance(plan, A2APlan)
+        assert plan.backend == "factorized"
+        assert plan.block_shape == (2, 8, 32)
+        assert moe_a2a_plan(cfg, mesh, (), 2, 8) is None
+        # same geometry again: fetched from the registry, not rebuilt
+        again = moe_a2a_plan(cfg, mesh, ("data", "pod"), E_loc=2, C=8)
+        assert again is plan

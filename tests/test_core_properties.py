@@ -47,3 +47,34 @@ class TestSimulatorProperties:
     @settings(max_examples=6, deadline=None)
     def test_round_orders_commute(self, order):
         assert check_correct((2, 3, 4), tuple(order))
+
+
+class TestPlanProperties:
+    """Resolution invariants of the A2APlan registry (core.plan)."""
+
+    @given(st.lists(st.integers(1, 6), min_size=1, max_size=4),
+           st.sampled_from(["direct", "factorized", "pipelined", "overlap",
+                            "tuned"]),
+           st.integers(1, 64))
+    @settings(max_examples=60, deadline=None)
+    def test_resolution_invariants(self, dims, backend, block):
+        from repro.core.plan import free_plans, plan_all_to_all
+
+        dims = tuple(dims)
+        names = tuple(f"a{i}" for i in range(len(dims)))
+        free_plans()
+        plan = plan_all_to_all(dims, names, (block,), "float32",
+                               backend=backend)
+        assert plan.p == math.prod(dims)
+        assert plan.backend in ("direct", "factorized", "pipelined",
+                                "overlap")
+        assert plan.n_chunks >= 1
+        d_active = len([s for s in dims if s > 1])
+        assert sorted(plan.order) == list(range(d_active))
+        assert sorted(plan.rev_order) == list(range(d_active))
+        assert plan.describe()["blocks_sent_per_device"] == \
+            plan.fact.blocks_sent_per_device()
+        # the registry returns the identical object for the identical key
+        again = plan_all_to_all(dims, names, (block,), "float32",
+                                backend=backend)
+        assert again is plan and again.describe()["cache"] == "hit"

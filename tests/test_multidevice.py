@@ -22,6 +22,18 @@ def test_zero_copy_hlo():
 
 
 @pytest.mark.slow
+def test_plan_equivalence_12dev():
+    # A2APlan.forward/reverse/tiled/overlap bit-exact with the legacy free
+    # functions across backends x variants x round orders, shims warn, and
+    # the plan registry amortizes construction.
+    out = run_device_script("check_plan.py", devices=12)
+    assert "OK plan forward/reverse == legacy free functions" in out
+    assert "OK plan tiled == legacy tiled" in out
+    assert "OK plan fused overlap == legacy overlapped_all_to_all" in out
+    assert "OK plan cache amortizes" in out
+
+
+@pytest.mark.slow
 def test_overlap_engine_parity():
     out = run_device_script("check_overlap.py", devices=8)
     assert "OK overlap==factorized==direct" in out
