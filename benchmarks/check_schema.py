@@ -1,0 +1,86 @@
+"""CI guard: fail when the alltoall_cmp result schema or backend column
+set drifts from the committed golden artifact.
+
+The benchmark-smoke job runs ``benchmarks.alltoall_cmp`` on forced host
+devices and compares its fresh JSON against
+``benchmarks/artifacts/alltoall_cmp.json`` *structurally* — never on
+timings, which are machine-dependent:
+
+* the set of ``impl`` columns (direct, factorized[d=k], overlap[d=2],
+  autotune[d=2]) must match exactly — a silently dropped or renamed
+  backend column is the regression this guard exists for;
+* per column, the row key set and the ``plan`` (describe()) key set must
+  match — additions and removals both fail, so describe()/artifact
+  schema changes have to land together with a regenerated golden;
+* per column, the measured ``block_elems`` sweep must match.
+
+Usage: python benchmarks/check_schema.py FRESH.json [GOLDEN.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+GOLDEN = Path(__file__).resolve().parent / "artifacts" / "alltoall_cmp.json"
+
+
+def schema(rows: list[dict]) -> dict[str, dict]:
+    cols: dict[str, dict] = {}
+    for r in rows:
+        col = cols.get(r["impl"])
+        if col is None:
+            col = cols[r["impl"]] = {"keys": set(r), "keys_every": set(r),
+                                     "plan_keys": set(r.get("plan") or {}),
+                                     "elems": set()}
+        # union AND intersection: a key dropped from only *some* rows of a
+        # column is drift too, not something the union may paper over
+        col["keys"] |= set(r)
+        col["keys_every"] &= set(r)
+        col["plan_keys"] |= set(r.get("plan") or {})
+        col["elems"].add(r["block_elems"])
+    return cols
+
+
+def diff(fresh: dict, golden: dict) -> list[str]:
+    problems = []
+    if set(fresh) != set(golden):
+        problems.append(f"backend column set drift: fresh={sorted(fresh)} "
+                        f"golden={sorted(golden)}")
+    for impl in sorted(set(fresh) & set(golden)):
+        for field in ("keys", "keys_every", "plan_keys", "elems"):
+            f, g = fresh[impl][field], golden[impl][field]
+            if f != g:
+                problems.append(
+                    f"{impl}: {field} drift: only-fresh={sorted(f - g)} "
+                    f"only-golden={sorted(g - f)}")
+    return problems
+
+
+def main(argv) -> int:
+    if not 1 <= len(argv) <= 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    fresh_path = Path(argv[0])
+    golden_path = Path(argv[1]) if len(argv) == 2 else GOLDEN
+    fresh = schema(json.loads(fresh_path.read_text()))
+    golden = schema(json.loads(golden_path.read_text()))
+    problems = diff(fresh, golden)
+    if problems:
+        print("alltoall_cmp schema drift vs committed golden "
+              f"({golden_path}):", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        print("If the change is intentional, regenerate the golden: "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=16 "
+              "PYTHONPATH=src python -m benchmarks.alltoall_cmp",
+              file=sys.stderr)
+        return 1
+    impls = ", ".join(sorted(fresh))
+    print(f"OK alltoall_cmp schema matches golden ({impls})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -30,6 +30,14 @@ from .plan import (
     plan_cache_stats,
     set_plan_cache_capacity,
 )
+from .autotune import (
+    TuningDB,
+    autotune,
+    autotune_stats,
+    default_db_path,
+    plan_db_key,
+    reset_autotune_stats,
+)
 from .simulator import (
     PAPER_EXAMPLES,
     example_index_table,
@@ -59,17 +67,18 @@ from .overlap import (
 
 __all__ = [
     "A2APlan", "DCN", "ICI", "LinkModel", "Measurement", "PAPER_EXAMPLES",
-    "Schedule", "TorusFactorization", "Violation", "cache_stats",
-    "cart_create", "check_guidelines", "choose_algorithm", "choose_chunks",
-    "collective_bytes_of", "crossover_block_bytes", "dims_create",
+    "Schedule", "TorusFactorization", "TuningDB", "Violation", "autotune",
+    "autotune_stats", "cache_stats", "cart_create", "check_guidelines",
+    "choose_algorithm", "choose_chunks", "collective_bytes_of",
+    "crossover_block_bytes", "default_db_path", "dims_create",
     "direct_all_to_all", "direct_all_to_all_tiled", "example_index_table",
     "factorized_all_to_all", "factorized_all_to_all_tiled", "format_report",
     "free", "free_all", "free_plans", "get_factorization", "host_alltoall",
     "interleave_report", "max_dims", "overlapped_all_to_all",
     "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
     "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",
-    "plan_cache_stats", "predict_overlapped", "prime_factorization",
-    "round_datatype", "run_pipelined", "set_cache_capacity",
-    "set_plan_cache_capacity", "simulate_direct_alltoall",
-    "simulate_factorized_alltoall",
+    "plan_cache_stats", "plan_db_key", "predict_overlapped",
+    "prime_factorization", "reset_autotune_stats", "round_datatype",
+    "run_pipelined", "set_cache_capacity", "set_plan_cache_capacity",
+    "simulate_direct_alltoall", "simulate_factorized_alltoall",
 ]

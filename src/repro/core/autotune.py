@@ -1,0 +1,564 @@
+"""Empirical autotuner: measured plan selection with a persistent tuning DB.
+
+The paper's §5 conclusion — "by choosing the factorization of p and
+selecting appropriate implementations for the component MPI_Alltoall
+operations, the presented implementation gives ample opportunities for
+algorithm tuning and adaptation to the particular high-performance
+system" — is exploited analytically by ``tuning.choose_algorithm``
+(alpha-beta model) and *empirically* here: :func:`autotune` times real
+executions of candidate configurations for one ``(mesh, axes,
+block_shape, dtype)`` plan key and records the measured winner in a
+persistent JSON database, keyed by the memoized device fingerprint from
+``core.cache`` plus the plan key, so the search cost is paid once per
+machine x shape, ever.
+
+Search space (bounded by ``budget_seconds``):
+
+* backend per plan — ``direct`` | ``factorized`` | ``overlap``,
+* round order — permutations of the active per-dimension rounds
+  (exhaustive for d <= 3, identity + reversal beyond),
+* ``n_chunks`` for the overlap engine — powers of two up to
+  ``max_chunks`` plus the analytic ``choose_chunks`` suggestion,
+* candidate torus factorizations from ``tuning.candidate_factorizations``
+  over the same devices (measured on auxiliary Cartesian meshes; recorded
+  for mesh-construction decisions, never applied behind the caller's
+  axes).
+
+Timing discipline: per candidate, ``warmup`` untimed executions then
+``repeats`` timed ones; the score is the median (robust to scheduler
+noise); every executed call is counted in ``autotune_stats()
+["timing_executions"]`` so tests can prove a DB hit performs zero
+measurements.
+
+Per-axis link feedback (the analytic-model bridge): a two-point
+alpha-beta fit over each active axis turns measured single-axis
+all-to-all times into per-axis :class:`~repro.core.tuning.LinkModel`
+overrides, recorded in the DB and fed back into ``choose_chunks`` /
+``predict_overlapped`` (which accept per-axis links end-to-end) — so the
+cost model a DB-hit plan reports is priced with *this machine's*
+bandwidths, not the TPU-flavoured defaults.
+
+Integration: ``plan_all_to_all(..., backend="autotune")`` consults the
+DB — hit → build the recorded winner instantly (``tuned_from:
+"measured"``); miss → fall back to the analytic ``choose_algorithm``
+choice (``tuned_from: "model"``) *without* measuring, so jitted paths
+never block on a search.  Only an explicit :func:`autotune` call times
+anything.
+
+DB location: ``$REPRO_TUNING_DB`` if set, else
+``~/.cache/repro/tuning.json`` (``$XDG_CACHE_HOME`` honored).  Corrupt,
+truncated, or unreadable DB files are ignored with a warning — plan
+construction must never crash on tuning state.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+import statistics
+import time
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .cache import cart_create, device_fingerprint
+from .dims import max_dims
+from .factorized import _as_tuple
+from .tuning import LinkModel, candidate_factorizations, choose_chunks
+
+DB_VERSION = 1
+
+# Backends the measured search may record as a winner (and that a DB
+# record is allowed to request at plan-build time).
+MEASURED_BACKENDS = ("direct", "factorized", "overlap")
+
+
+# ---------------------------------------------------------------------------
+# The persistent tuning database
+# ---------------------------------------------------------------------------
+
+def default_db_path() -> Path:
+    """``$REPRO_TUNING_DB`` override, else ``~/.cache/repro/tuning.json``."""
+    env = os.environ.get("REPRO_TUNING_DB")
+    if env:
+        return Path(env).expanduser()
+    cache_home = os.environ.get("XDG_CACHE_HOME")
+    base = Path(cache_home).expanduser() if cache_home \
+        else Path.home() / ".cache"
+    return base / "repro" / "tuning.json"
+
+
+# Per-DB-path write counters, bumped on every successful write/clear so
+# the plan registry (which caches resolved "autotune" plans) can key on
+# DB state and re-resolve after a new measurement lands.  Per path, not
+# global: writing a scratch DB must not invalidate cached plans resolved
+# against the default one.
+_GENERATIONS: dict[str, int] = {}
+
+
+def db_generation(path=None) -> int:
+    p = Path(path).expanduser() if path is not None else default_db_path()
+    return _GENERATIONS.get(str(p), 0)
+
+
+def _bump_generation(path: Path) -> None:
+    _GENERATIONS[str(path)] = _GENERATIONS.get(str(path), 0) + 1
+
+
+class TuningDB:
+    """Persistent ``key -> measured record`` store (one JSON file).
+
+    Robustness contract: a missing, corrupt, truncated, or unreadable
+    file loads as empty with a single warning; a failed write warns and
+    leaves the in-memory state usable.  Writes are atomic (temp file +
+    ``os.replace``) so a crashed process never truncates the DB.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = Path(path).expanduser() if path is not None \
+            else default_db_path()
+        # precomputed string form: the plan registry embeds it in every
+        # autotune cache key, on the steady-state fetch path
+        self.path_key = str(self.path)
+
+    def generation(self) -> int:
+        return _GENERATIONS.get(self.path_key, 0)
+
+    def load(self) -> dict:
+        """The ``{key: record}`` entry map (empty on any load problem)."""
+        try:
+            raw = self.path.read_text()
+        except FileNotFoundError:
+            return {}
+        except OSError as e:
+            warnings.warn(f"unreadable tuning DB {self.path}: {e}; "
+                          "treating as empty", stacklevel=2)
+            return {}
+        try:
+            doc = json.loads(raw)
+            if not isinstance(doc, dict) or \
+                    not isinstance(doc.get("entries"), dict):
+                raise ValueError("not a tuning-DB document")
+        except (ValueError, TypeError) as e:
+            warnings.warn(f"corrupt tuning DB {self.path} ({e}); "
+                          "treating as empty", stacklevel=2)
+            return {}
+        if doc.get("version") != DB_VERSION:
+            # A future format: don't guess, don't crash, don't clobber
+            # until someone actually stores a new measurement.
+            warnings.warn(f"tuning DB {self.path} has version "
+                          f"{doc.get('version')!r} != {DB_VERSION}; "
+                          "ignoring its entries", stacklevel=2)
+            return {}
+        return doc["entries"]
+
+    def get(self, key: str) -> dict | None:
+        return self.load().get(key)
+
+    def put(self, key: str, record: dict) -> bool:
+        """Merge one record and persist; True if the write landed.
+
+        The read-merge-write runs under an advisory file lock (POSIX
+        ``flock`` on ``<db>.lock``) so two processes autotuning different
+        keys against the shared default DB don't drop each other's
+        records; where locking is unavailable the atomic replace still
+        prevents corruption (last writer wins per whole file).
+        """
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            with self._locked():
+                entries = self.load()
+                entries[key] = record
+                doc = {"version": DB_VERSION, "entries": entries}
+                tmp = self.path.with_name(self.path.name + ".tmp")
+                tmp.write_text(json.dumps(doc, indent=1))
+                os.replace(tmp, self.path)
+        except OSError as e:
+            warnings.warn(f"could not write tuning DB {self.path}: {e}",
+                          stacklevel=2)
+            return False
+        _bump_generation(self.path)
+        return True
+
+    def _locked(self):
+        import contextlib
+        try:
+            import fcntl
+        except ImportError:                   # non-POSIX: best effort
+            return contextlib.nullcontext()
+
+        @contextlib.contextmanager
+        def lock():
+            lockfile = self.path.with_name(self.path.name + ".lock")
+            with open(lockfile, "w") as fh:
+                fcntl.flock(fh, fcntl.LOCK_EX)
+                try:
+                    yield
+                finally:
+                    fcntl.flock(fh, fcntl.LOCK_UN)
+        return lock()
+
+    def clear(self) -> None:
+        """Delete the DB file (missing file is fine).  Takes the same
+        advisory lock as ``put`` so a concurrent read-merge-write can't
+        resurrect the cleared entries."""
+        try:
+            with self._locked():
+                self.path.unlink()
+        except FileNotFoundError:
+            pass
+        except OSError as e:
+            warnings.warn(f"could not delete tuning DB {self.path}: {e}",
+                          stacklevel=2)
+            return
+        _bump_generation(self.path)
+
+    def __len__(self) -> int:
+        return len(self.load())
+
+    def __repr__(self):
+        return f"TuningDB({str(self.path)!r})"
+
+
+# Default handle, memoized per *resolved* path — the same resolution
+# autotune()'s default TuningDB() performs — so the two default-DB code
+# paths can never diverge, and env changes (tests monkeypatching
+# REPRO_TUNING_DB / XDG_CACHE_HOME) take effect immediately.
+_DEFAULT_DBS: dict[str, TuningDB] = {}
+
+
+def get_default_db() -> TuningDB:
+    path = str(default_db_path())
+    db = _DEFAULT_DBS.get(path)
+    if db is None:
+        db = _DEFAULT_DBS[path] = TuningDB(path)
+    return db
+
+
+# ---------------------------------------------------------------------------
+# Keys, stats, lookup
+# ---------------------------------------------------------------------------
+
+_STATS = {"searches": 0, "timing_executions": 0,
+          "db_hits": 0, "db_misses": 0}
+
+
+def autotune_stats() -> dict[str, int]:
+    """Counters: measured searches run, timed executions performed, and
+    plan-construction DB hits/misses (``backend="autotune"`` lookups)."""
+    return dict(_STATS)
+
+
+def reset_autotune_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+def plan_db_key(dev_key, dims, axis_names, block_shape, dtype,
+                variant: str) -> str:
+    """Stable DB key: device-fingerprint digest + the plan identity.
+
+    ``dev_key`` is the ``core.cache.device_fingerprint`` tuple (digested —
+    512-device fingerprints stay out of the JSON keys) or None for
+    device-agnostic dims-tuple plans, which therefore never hit records
+    stored from real measurements.
+    """
+    fp = "none" if dev_key is None else \
+        hashlib.sha1(repr(dev_key).encode()).hexdigest()[:16]
+    block = "x".join(str(int(s)) for s in block_shape)
+    return (f"fp:{fp}|dims:{','.join(str(int(s)) for s in dims)}"
+            f"|axes:{','.join(axis_names)}|block:{block}"
+            f"|dtype:{jnp.dtype(dtype).name}|variant:{variant}")
+
+
+def _valid_record(rec) -> bool:
+    if not isinstance(rec, dict):
+        return False
+    w = rec.get("winner")
+    return (isinstance(w, dict)
+            and w.get("backend") in MEASURED_BACKENDS
+            and isinstance(w.get("n_chunks", 1), int))
+
+
+def lookup_measured(dev_key, dims, axis_names, block_shape, dtype,
+                    variant: str, db: TuningDB | None = None) -> dict | None:
+    """The plan-construction side of the DB: a validated record or None.
+
+    Counts a hit/miss in ``autotune_stats``; malformed records (a
+    hand-edited DB, a newer writer) are treated as misses so
+    ``plan_all_to_all`` can always fall back to the analytic model.
+    """
+    db = db if db is not None else get_default_db()
+    rec = db.get(plan_db_key(dev_key, dims, axis_names, block_shape,
+                             dtype, variant))
+    if rec is not None and not _valid_record(rec):
+        warnings.warn(f"ignoring malformed tuning record in {db.path}",
+                      stacklevel=2)
+        rec = None
+    if rec is None:
+        _STATS["db_misses"] += 1
+    else:
+        _STATS["db_hits"] += 1
+    return rec
+
+
+def demote_hit_to_miss() -> None:
+    """Reclassify the last counted hit as a miss: called by the plan
+    layer when a looked-up record proves unusable at build time, so
+    ``db_hits`` stays equal to the number of plans actually built from
+    measurements (what the dryrun telemetry documents)."""
+    _STATS["db_hits"] -= 1
+    _STATS["db_misses"] += 1
+
+
+def measured_links(record: dict) -> tuple[LinkModel, ...] | None:
+    """Per-axis LinkModels recorded by the search, if the fit succeeded."""
+    raw = record.get("measured_links")
+    if not raw:
+        return None
+    try:
+        return tuple(LinkModel(alpha=float(l["alpha"]),
+                               bandwidth=float(l["bandwidth"]))
+                     for l in raw)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def _timed(fn, x, *, warmup: int, repeats: int) -> float:
+    """Median wall seconds of ``fn(x)``; every execution (warmup included)
+    is counted in the timing_executions stat."""
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(x))
+        _STATS["timing_executions"] += 1
+    ts = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        ts.append(time.perf_counter() - t0)
+        _STATS["timing_executions"] += 1
+    return statistics.median(ts)
+
+
+def _operand(p: int, block_shape, dtype):
+    """Deterministic global (p, p, *block) host_fn operand."""
+    n = p * p * math.prod(block_shape)
+    return (jnp.arange(n) % 251).reshape((p, p) + tuple(block_shape)) \
+        .astype(dtype)
+
+
+def _fit_axis_links(mesh, axis_names, dims, dtype, *, warmup, repeats,
+                    deadline) -> list[dict] | None:
+    """Two-point alpha-beta fit per active axis from measured single-axis
+    all-to-alls: t(b) = (D_k - 1) * (alpha_k + b / bw_k) at two payload
+    sizes solves for (alpha_k, bw_k).  Returns JSON-ready dicts —
+    trivial (size-1) axes, which no prediction ever prices, get a fixed
+    placeholder marked ``fit: False`` to keep the list positional with
+    the axes — or None when the fit is infeasible (noise-swamped
+    timings, budget exhausted).
+    """
+    from .plan import plan_all_to_all
+
+    e_small, e_big = 16, 4096
+    itemsize = jnp.dtype(dtype).itemsize
+    out = []
+    for ax, Dk in zip(axis_names, dims):
+        if Dk <= 1:
+            # never on the critical path; keep a sane placeholder so the
+            # list stays positional with the axes
+            out.append({"alpha": 1e-6, "bandwidth": 1e9, "fit": False})
+            continue
+        if time.perf_counter() > deadline:
+            return None
+        ts = []
+        for nelem in (e_small, e_big):
+            plan = plan_all_to_all(mesh, (ax,), (nelem,), dtype,
+                                   backend="factorized")
+            x = _operand(Dk, (nelem,), dtype)
+            ts.append(_timed(plan.host_fn(mesh), x, warmup=warmup,
+                             repeats=repeats))
+        b1, b2 = e_small * itemsize, e_big * itemsize
+        t1, t2 = ts
+        if t2 <= t1:          # noise swamped the size difference
+            return None
+        bw = (Dk - 1) * (b2 - b1) / (t2 - t1)
+        alpha = t1 / (Dk - 1) - b1 / bw
+        out.append({"alpha": max(alpha, 1e-9),
+                    "bandwidth": max(bw, 1e3), "fit": True})
+    return out
+
+
+def _subgroup_devices(mesh: Mesh, axes) -> list:
+    """Devices of one communication subgroup: the tuned axes swept, every
+    other mesh axis pinned at index 0.  The factorization sweep rebuilds
+    its auxiliary Cartesian meshes over exactly these devices — for axes
+    spanning the whole mesh this is all of them, for a subset (MoE EP
+    axes on a mesh that also has "model") it is one representative
+    group, which is what a single all-to-all actually runs over.
+
+    Returned in this package's linearization: most-significant requested
+    axis outermost (row-major flat list, fastest digit contiguous) — the
+    order ``cart_create`` expects.
+    """
+    import numpy as np
+    idx = tuple(slice(None) if n in axes else 0 for n in mesh.axis_names)
+    sub = mesh.devices[idx]
+    sel = [n for n in mesh.axis_names if n in axes]
+    sub = np.transpose(sub, [sel.index(a) for a in reversed(axes)])
+    return list(sub.flat)
+
+
+def _round_orders(d_active: int, round_orders):
+    if round_orders is not None:
+        return [tuple(o) for o in round_orders]
+    if d_active <= 1:
+        return [tuple(range(d_active))]
+    if d_active <= 3:
+        import itertools
+        return list(itertools.permutations(range(d_active)))
+    ident = tuple(range(d_active))
+    return [ident, tuple(reversed(ident))]
+
+
+def _chunk_candidates(dims, links, block_bytes, max_chunks: int):
+    cands = {n for n in (2, 4, 8, 16) if n <= max_chunks}
+    model_n = choose_chunks(dims, links, block_bytes,
+                            max_chunks=max(1, max_chunks))
+    if model_n > 1:
+        cands.add(model_n)
+    return sorted(cands)
+
+
+def autotune(mesh: Mesh, axis_names, block_shape, dtype, *,
+             variant: str = "natural", max_chunks: int = 8,
+             round_orders=None, include_factorizations: bool = True,
+             warmup: int = 2, repeats: int = 5,
+             budget_seconds: float = 20.0, fit_links: bool = True,
+             db: TuningDB | None = None, verbose: bool = False):
+    """Measure candidate configurations, persist the winner, return its plan.
+
+    The returned :class:`~repro.core.plan.A2APlan` is exactly what any
+    later ``plan_all_to_all(mesh, axes, block_shape, dtype,
+    backend="autotune")`` call will reconstruct from the DB (``describe()
+    ["tuned_from"] == "measured"``).
+
+    ``budget_seconds`` bounds the whole search: once exceeded, remaining
+    candidates are recorded as skipped (never silently dropped) — the
+    direct and factorized baselines are always measured.
+    """
+    from .plan import plan_all_to_all, default_links
+
+    axes = _as_tuple(axis_names)
+    dims = tuple(int(mesh.shape[a]) for a in axes)
+    p = math.prod(dims)
+    dev_key = device_fingerprint(mesh)
+    db = db if db is not None else TuningDB()
+    deadline = time.perf_counter() + budget_seconds
+    _STATS["searches"] += 1
+
+    block_shape = tuple(int(s) for s in block_shape)
+    block_bytes = math.prod(block_shape) * jnp.dtype(dtype).itemsize
+    x = _operand(p, block_shape, dtype)
+
+    links_fitted = None
+    if fit_links:
+        links_fitted = _fit_axis_links(mesh, axes, dims, dtype,
+                                       warmup=warmup, repeats=repeats,
+                                       deadline=deadline)
+    model_links = tuple(LinkModel(l["alpha"], l["bandwidth"])
+                        for l in links_fitted) if links_fitted \
+        else default_links(axes)
+
+    # ---- candidate list on the caller's axes (winner-eligible) ----
+    d_active = len([D for D in dims if D > 1])
+    ident = tuple(range(d_active))
+    cands = [("direct", ident, 1)]
+    for order in _round_orders(d_active, round_orders):
+        cands.append(("factorized", order, 1))
+    if d_active >= 1:
+        for n in _chunk_candidates(dims, model_links, float(block_bytes),
+                                   max_chunks):
+            cands.append(("overlap", ident, n))
+
+    table, skipped = [], []
+    for i, (backend, order, n) in enumerate(cands):
+        if i >= 2 and time.perf_counter() > deadline:
+            skipped.append({"backend": backend, "round_order": list(order),
+                            "n_chunks": n})
+            continue
+        plan = plan_all_to_all(mesh, axes, block_shape, dtype,
+                               backend=backend, variant=variant,
+                               round_order=order, n_chunks=n)
+        med = _timed(plan.host_fn(mesh), x, warmup=warmup, repeats=repeats)
+        table.append({"backend": backend, "dims": list(dims),
+                      "round_order": list(order), "n_chunks": n,
+                      "median_us": med * 1e6, "eligible": True})
+        if verbose:
+            print(f"[autotune] {backend} order={order} n={n}: "
+                  f"{med * 1e6:.1f}us")
+
+    # ---- alternative factorizations of p (informational rows: they need
+    # a different Cartesian mesh, so they can't be applied behind the
+    # caller's axes — recorded to steer mesh construction) ----
+    if include_factorizations and p > 1:
+        group_devices = _subgroup_devices(mesh, axes)
+        for dims_msf in candidate_factorizations(p, max_d=min(4,
+                                                              max_dims(p))):
+            dims_ff = tuple(reversed(dims_msf))   # fastest digit first
+            if dims_ff == dims or len(dims_ff) == 1:
+                continue
+            if time.perf_counter() > deadline:
+                skipped.append({"backend": "factorized",
+                                "dims": list(dims_ff), "n_chunks": 1})
+                continue
+            aux_names = tuple(f"at{i}" for i in range(len(dims_ff)))
+            aux_mesh = cart_create(group_devices, dims_ff, aux_names)
+            plan = plan_all_to_all(aux_mesh, aux_names, block_shape, dtype,
+                                   backend="factorized", variant=variant)
+            med = _timed(plan.host_fn(aux_mesh), x, warmup=warmup,
+                         repeats=repeats)
+            table.append({"backend": "factorized", "dims": list(dims_ff),
+                          "round_order": list(range(len(dims_ff))),
+                          "n_chunks": 1, "median_us": med * 1e6,
+                          "eligible": False})
+            if verbose:
+                print(f"[autotune] factorized dims={dims_ff}: "
+                      f"{med * 1e6:.1f}us")
+    if skipped and verbose:
+        print(f"[autotune] budget exhausted; skipped {len(skipped)} "
+              f"candidates: {skipped}")
+
+    eligible = [r for r in table if r["eligible"]]
+    win = min(eligible, key=lambda r: r["median_us"])
+    best_row = min(table, key=lambda r: r["median_us"])
+    record = {
+        "version": DB_VERSION,
+        "winner": {"backend": win["backend"],
+                   "round_order": win["round_order"],
+                   "n_chunks": int(win["n_chunks"]),
+                   "median_us": win["median_us"]},
+        "p": p, "dims": list(dims), "axis_names": list(axes),
+        "block_shape": list(block_shape),
+        "dtype": jnp.dtype(dtype).name, "variant": variant,
+        "best_factorization": {"dims": best_row["dims"],
+                               "backend": best_row["backend"],
+                               "median_us": best_row["median_us"]},
+        "measured_links": links_fitted,
+        "table": table, "skipped": skipped,
+        "warmup": warmup, "repeats": repeats,
+        "created": time.time(),
+    }
+    db.put(plan_db_key(dev_key, dims, axes, block_shape, dtype, variant),
+           record)
+    # Reconstruct through the DB path so the returned plan is the exact
+    # object later backend="autotune" callers fetch (tuned_from="measured").
+    return plan_all_to_all(mesh, axes, block_shape, dtype,
+                           backend="autotune", variant=variant, db=db)

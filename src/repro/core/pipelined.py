@@ -26,10 +26,16 @@ __all__ = ["choose_chunks", "overlapped_all_to_all", "pipelined_all_to_all"]
 
 
 def choose_chunks(p: int, d: int, block_bytes: float,
-                  link: LinkModel, max_chunks: int = 4) -> int:
+                  link: LinkModel, max_chunks: int = 4, *,
+                  links=None) -> int:
     """Pick n_chunks minimizing the overlapped alpha-beta estimate for a
-    uniform-link d-way factorization of ``p`` (legacy signature; see
-    ``tuning.choose_chunks`` for the per-axis form)."""
+    d-way factorization of ``p`` (legacy signature; see
+    ``tuning.choose_chunks`` for the native per-axis form).
+
+    ``link`` prices every axis uniformly; pass ``links=`` (a length-d
+    sequence) to override per axis — e.g. the measured fits recorded by
+    ``core.autotune`` — which takes precedence over ``link``.
+    """
     dims = dims_create(p, d)
-    return _choose_chunks(dims, (link,) * len(dims), block_bytes,
-                          max_chunks=max_chunks)
+    return _choose_chunks(dims, link if links is None else links,
+                          block_bytes, max_chunks=max_chunks)

@@ -37,6 +37,7 @@ chunks, cache hit/miss) for logging, goldens, and the dry-run artifacts.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Callable
 
 import jax.numpy as jnp
@@ -68,7 +69,8 @@ from .tuning import (
     predict_overlapped,
 )
 
-BACKENDS = ("tuned", "direct", "factorized", "pipelined", "overlap")
+BACKENDS = ("tuned", "autotune", "direct", "factorized", "pipelined",
+            "overlap")
 
 # Mesh axes that cross the slow inter-pod network; everything else is
 # priced as ICI.  Overridable per plan via ``links=``.
@@ -95,7 +97,8 @@ class A2APlan:
                  rev_order: tuple[int, ...], n_chunks: int,
                  block_shape: tuple[int, ...] | None, dtype,
                  links: tuple[LinkModel, ...], schedule: Schedule | None,
-                 mesh: Mesh | None):
+                 mesh: Mesh | None, tuned_from: str | None = None,
+                 measured: dict | None = None):
         self.fact = fact
         self.requested_backend = requested_backend
         self.backend = backend
@@ -107,6 +110,12 @@ class A2APlan:
         self.dtype = dtype
         self.links = links
         self.schedule = schedule
+        # Provenance of the backend/chunk choice: "measured" (tuning-DB
+        # record from core.autotune), "model" (alpha-beta cost model), or
+        # None (caller requested an explicit backend).
+        self.tuned_from = tuned_from
+        # For measured plans: the winner median + full measured table.
+        self.measured = measured
         self._mesh = mesh
         self._from_cache = False
         self._fetches = 1
@@ -240,6 +249,8 @@ class A2APlan:
             "blocks_sent_per_device": self.fact.blocks_sent_per_device(),
             "links": [{"alpha": l.alpha, "bandwidth": l.bandwidth}
                       for l in self.links],
+            "tuned_from": self.tuned_from,
+            "measured": self.measured,
             "cache": "hit" if self._from_cache else "miss",
         }
 
@@ -299,7 +310,12 @@ def _resolve(dims, axis_names, block_shape, dtype, requested_backend,
     sched = None
     if block_bytes is not None:
         if backend == "direct":
-            slowest = min(links, key=lambda l: l.bandwidth)
+            # price only links that carry traffic: a size-1 axis (e.g. a
+            # trivial "pod" dim, or an unfitted placeholder link from a
+            # tuning-DB record) must not masquerade as the bottleneck
+            active_links = [l for Dk, l in zip(dims, links) if Dk > 1] \
+                or list(links)
+            slowest = min(active_links, key=lambda l: l.bandwidth)
             t = predict_direct(p, float(block_bytes), slowest) \
                 + compute_seconds
         elif backend == "factorized":
@@ -317,7 +333,7 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
                     variant: str = "natural", round_order=None,
                     reverse_round_order=None, n_chunks: int = 0,
                     max_chunks: int = 8, links=None,
-                    compute_seconds: float = 0.0) -> A2APlan:
+                    compute_seconds: float = 0.0, db=None) -> A2APlan:
     """Build (or fetch from the LRU registry) an :class:`A2APlan`.
 
     Args:
@@ -327,8 +343,12 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
         the inside-``shard_map`` shim path).
       axis_names: torus dimensions, fastest digit first.
       block_shape, dtype: shape/dtype of one per-rank block — feeds the
-        alpha-beta cost model.  Optional unless ``backend="tuned"``.
-      backend: "tuned" (cost-model choice) or an explicit kernel:
+        alpha-beta cost model.  Optional unless ``backend="tuned"`` or
+        ``"autotune"``.
+      backend: "tuned" (cost-model choice), "autotune" (measured choice
+        from the persistent tuning DB — a hit rebuilds the recorded
+        winner, a miss falls back to the cost model without measuring;
+        see ``core.autotune``), or an explicit kernel:
         "direct" | "factorized" | "pipelined" | "overlap".
       variant: per-round formulation, "natural" (zero-copy) or "paper".
       round_order / reverse_round_order: permutations of the active rounds
@@ -337,8 +357,11 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
         model under "tuned", else 2).
       max_chunks: search bound for the tuned chunk count.
       links: per-axis :class:`LinkModel` overrides (default: DCN for
-        ``pod``-like axes, ICI otherwise).
+        ``pod``-like axes, ICI otherwise; measured per-axis fits under a
+        tuning-DB hit).
       compute_seconds: per-call interleaved compute estimate for tuning.
+      db: tuning-DB handle for ``backend="autotune"`` (default: the
+        ``REPRO_TUNING_DB`` / ``~/.cache/repro/tuning.json`` database).
     """
     axis_names = _as_tuple(axis_names)
     mesh = None
@@ -364,20 +387,72 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
            else tuple(reverse_round_order),
            int(n_chunks), int(max_chunks), links_key,
            float(compute_seconds))
+    if backend == "autotune":
+        # Cached autotune plans must be re-resolved when the DB changes
+        # (a new measurement landed, or the file was deleted): key on the
+        # DB identity + its per-path write generation.
+        from .autotune import get_default_db
+        db = db if db is not None else get_default_db()
+        key = key + (db.path_key, db.generation())
     cached = _PLANS.get(key)
     if cached is not None:
         cached._from_cache = True
         cached._fetches += 1
         return cached
 
-    resolved, order, rev_order, n, link_models, sched = _resolve(
-        dims, axis_names, block_shape, dtype, backend, variant, round_order,
-        reverse_round_order, n_chunks, max_chunks, links, compute_seconds)
+    def build(req_backend, order_, chunks_, links_):
+        return _resolve(dims, axis_names, block_shape, dtype, req_backend,
+                        variant, order_, reverse_round_order, chunks_,
+                        max_chunks, links_, compute_seconds)
+
+    tuned_from, measured = None, None
+    if backend == "tuned":
+        tuned_from = "model"
+        parts = build("tuned", round_order, n_chunks, links)
+    elif backend == "autotune":
+        if block_shape is None or dtype is None:
+            raise ValueError('backend="autotune" needs block_shape and '
+                             "dtype (the tuning-DB key)")
+        from .autotune import lookup_measured, measured_links
+        rec = lookup_measured(dev_key, dims, axis_names,
+                              tuple(block_shape), dtype, variant, db=db)
+        parts = None
+        if rec is not None:
+            w = rec["winner"]
+            rec_order = round_order if round_order is not None else \
+                (tuple(w["round_order"]) if w.get("round_order") is not None
+                 else None)
+            rec_chunks = n_chunks or int(w.get("n_chunks", 0))
+            rec_links = links
+            if rec_links is None:
+                rec_links = measured_links(rec)
+            try:
+                parts = build(w["backend"], rec_order, rec_chunks,
+                              rec_links)
+                tuned_from = "measured"
+                measured = {"median_us": w.get("median_us"),
+                            "table": rec.get("table", []),
+                            "best_factorization":
+                                rec.get("best_factorization"),
+                            "db_path": str(db.path)}
+            except ValueError as e:
+                from .autotune import demote_hit_to_miss
+                demote_hit_to_miss()   # telemetry: this plan is model-built
+                warnings.warn(f"tuning-DB record unusable for this plan "
+                              f"({e}); falling back to the cost model")
+        if parts is None:   # DB miss (or unusable record): analytic choice,
+            tuned_from = "model"   # never a blocking measurement
+            parts = build("tuned", round_order, n_chunks, links)
+    else:
+        parts = build(backend, round_order, n_chunks, links)
+
+    resolved, order, rev_order, n, link_models, sched = parts
     plan = A2APlan(fact, requested_backend=backend, backend=resolved,
                    variant=variant, order=order, rev_order=rev_order,
                    n_chunks=n, block_shape=None if block_shape is None
                    else tuple(block_shape), dtype=dtype, links=link_models,
-                   schedule=sched, mesh=mesh)
+                   schedule=sched, mesh=mesh, tuned_from=tuned_from,
+                   measured=measured)
     _PLANS.put(key, plan)
     return plan
 

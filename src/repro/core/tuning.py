@@ -43,6 +43,22 @@ ICI = LinkModel(alpha=1e-6, bandwidth=50e9)
 DCN = LinkModel(alpha=25e-6, bandwidth=6.4e9)
 
 
+def per_axis_links(links, d: int) -> tuple[LinkModel, ...]:
+    """Normalize a link spec to one :class:`LinkModel` per axis.
+
+    Accepts a single ``LinkModel`` (uniform torus — broadcast to every
+    axis) or a length-``d`` sequence of per-axis overrides, e.g. the
+    measured fits ``core.autotune`` feeds back into this model.  Every
+    prediction entry point below accepts either form.
+    """
+    if isinstance(links, LinkModel):
+        return (links,) * d
+    links = tuple(links)
+    if len(links) != d:
+        raise ValueError(f"{len(links)} links for {d} dims")
+    return links
+
+
 @dataclass(frozen=True)
 class Schedule:
     """A concrete algorithm choice for one all-to-all call."""
@@ -65,6 +81,7 @@ def predict_factorized(dims, links, block_bytes: float, p: int) -> float:
     ``D[k]-1`` messages of ``p/D[k]`` combined blocks each — this is
     exactly why the factorized algorithm wins the small-block regime.
     """
+    links = per_axis_links(links, len(dims))
     t = 0.0
     for Dk, link in zip(dims, links):
         if Dk == 1:
@@ -102,6 +119,7 @@ def predict_overlapped(dims, links, block_bytes: float, p: int,
     At ``n_chunks=1`` (and ``compute_seconds=0``) this is exactly
     ``predict_factorized``.
     """
+    links = per_axis_links(links, len(dims))
     active = [(Dk, l) for Dk, l in zip(dims, links) if Dk > 1]
     d = len(active)
     if d == 0:
@@ -120,7 +138,12 @@ def predict_overlapped(dims, links, block_bytes: float, p: int,
 
 def choose_chunks(dims, links, block_bytes: float, *, max_chunks: int = 8,
                   compute_seconds: float = 0.0) -> int:
-    """Chunk count minimizing ``predict_overlapped`` (1 = don't pipeline)."""
+    """Chunk count minimizing ``predict_overlapped`` (1 = don't pipeline).
+
+    ``links``: one uniform :class:`LinkModel` or a per-axis sequence —
+    measured per-axis bandwidths (``core.autotune``) plug in directly.
+    """
+    links = per_axis_links(links, len(dims))
     p = math.prod(dims)
     best_n, best_t = 1, float("inf")
     for n in range(1, max(1, max_chunks) + 1):
@@ -163,8 +186,13 @@ def choose_algorithm(axis_dims: tuple[int, ...],
     schedule keeps the given axis order; ``round_order`` remains an
     empirical knob on the plan (``plan_all_to_all(round_order=...)``).
     """
+    axis_links = per_axis_links(axis_links, len(axis_dims))
     p = math.prod(axis_dims)
-    slowest = min(axis_links, key=lambda l: l.bandwidth)
+    # direct is bounded by the slowest link that carries traffic; size-1
+    # axes (and their placeholder links) never do
+    active = [l for Dk, l in zip(axis_dims, axis_links) if Dk > 1] \
+        or list(axis_links)
+    slowest = min(active, key=lambda l: l.bandwidth)
     best = Schedule("direct", (p,), (slowest,),
                     predict_direct(p, block_bytes, slowest) + compute_seconds)
     t = predict_factorized(axis_dims, axis_links, block_bytes, p) \

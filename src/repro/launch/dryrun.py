@@ -35,6 +35,7 @@ from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, \
     input_specs
 from repro.core.hlo_inspect import (collective_bytes_by_stride,
                                     loop_aware_analysis, parse_hlo)
+from repro.core.autotune import autotune_stats
 from repro.core.plan import plan_cache_entries, plan_cache_stats
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, make_serve_step, make_train_step
@@ -181,6 +182,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     model = build_model(cfg)
     t0 = time.time()
     plans_before = {id(pl) for pl in plan_cache_entries()}
+    autotune_before = autotune_stats()
 
     p_abs = abstract_params(model.specs(), cfg.pdtype, mesh, rules)
 
@@ -254,10 +256,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         "params_active": active_param_count(cfg),
         # A2APlans resolved while tracing this cell (MoE dispatch/combine,
         # Ulysses re-shards): the introspectable record of which backend /
-        # chunk count / round order the cost model chose per collective.
+        # chunk count / round order was chosen per collective —
+        # describe() includes tuned_from ("measured" when a tuning-DB
+        # record drove the choice, "model" for the analytic default) and
+        # the measured candidate table for DB-hit plans.
         "a2a_plans": [pl.describe() for pl in plan_cache_entries()
                       if id(pl) not in plans_before],
         "a2a_plan_cache": plan_cache_stats(),
+        # Tuning-DB traffic for the cell (delta over the cell, like the
+        # a2a_plans snapshot above): under a2a_backend="autotune"
+        # db_hits/db_misses show whether measured records covered the
+        # plans; timing_executions must stay 0 in a dry run (compile-only
+        # paths never measure).
+        "a2a_autotune": {k: v - autotune_before[k]
+                         for k, v in autotune_stats().items()},
     }
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "

@@ -80,11 +80,14 @@ class ModelConfig:
     use_ulysses: bool = False         # Ulysses SP for attention
     expert_axes: tuple[str, ...] = ("data",)   # EP mesh axes (fastest first)
     a2a_variant: str = "natural"      # factorized A2A variant for EP/SP
-    # tuned | factorized | direct | pipelined | overlap
+    # tuned | autotune | factorized | direct | pipelined | overlap
     # "overlap" pipelines dispatch-round / expert-FFN / combine-round per
     # payload chunk (core.overlap); "tuned" picks backend AND chunk count
-    # from the alpha-beta model (tuning.choose_algorithm).  These three
-    # knobs parameterize A2APlan construction (core.plan.plan_all_to_all)
+    # from the alpha-beta model (tuning.choose_algorithm); "autotune"
+    # replays the measured winner from the persistent tuning DB
+    # (core.autotune) and falls back to "tuned" semantics on a DB miss —
+    # it never measures inside a model step.  These three knobs
+    # parameterize A2APlan construction (core.plan.plan_all_to_all)
     # in one place per consumer — moe.moe_a2a_plan and ulysses — and are
     # resolved once per (devices, axes, shape, dtype) plan key; nothing
     # dispatches on these strings at call time.
@@ -96,6 +99,13 @@ class ModelConfig:
             raise ValueError("n_heads must be divisible by n_kv_heads")
         if self.n_layers % len(self.block_pattern):
             raise ValueError("n_layers must divide into block_pattern")
+        # validate against the plan layer's own backend list so the two
+        # can never drift (lazy import: keep config importable without
+        # pulling the collective stack in until it's needed)
+        from repro.core.plan import BACKENDS
+        if self.a2a_backend not in BACKENDS:
+            raise ValueError(f"unknown a2a_backend {self.a2a_backend!r}; "
+                             f"expected one of {BACKENDS}")
 
     @property
     def hd(self) -> int:

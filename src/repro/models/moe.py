@@ -83,7 +83,11 @@ def moe_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int):
     Resolved once per (mesh devices, EP axes, block shape, dtype, config
     knobs) and fetched from the plan registry on every later layer/step —
     the paper's cached-communicator amortization.  ``cfg.a2a_backend``
-    parameterizes plan construction here and nowhere else.
+    parameterizes plan construction here and nowhere else; with
+    ``"autotune"`` the dispatch/combine collective replays the measured
+    winner recorded in the tuning DB for exactly this (devices, EP axes,
+    block, dtype) key, falling back to the analytic model on a miss — an
+    explicit ``core.autotune.autotune(...)`` run warms the DB offline.
     """
     if not axes or mesh is None:
         return None

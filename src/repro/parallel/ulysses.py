@@ -75,11 +75,16 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
 
     # One plan per (mesh devices, SP axes, tile shape, dtype), resolved
     # once and fetched from the registry on every later layer/step.  The
-    # re-shard itself is always the factorized tiled kernel; the overlap
-    # knob chunks at KV-head-group granularity above it (run_pipelined).
+    # re-shard defaults to the factorized tiled kernel; under
+    # cfg.a2a_backend="autotune" the tuning DB's measured winner for this
+    # tile shape is replayed instead (model fallback on a miss — nothing
+    # here ever blocks on a measurement).  The overlap knob chunks at
+    # KV-head-group granularity above it (run_pipelined).
+    reshard_backend = "autotune" if cfg.a2a_backend == "autotune" \
+        else "factorized"
     plan = plan_all_to_all(mesh, axes,
                            block_shape=(B, hq_loc, S // sp, hd),
-                           dtype=q.dtype, backend="factorized",
+                           dtype=q.dtype, backend=reshard_backend,
                            variant=cfg.a2a_variant)
 
     def inner_overlap(ql, kl, vl):

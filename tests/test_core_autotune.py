@@ -1,0 +1,339 @@
+"""Device-free unit tests for the empirical autotuner (core.autotune):
+tuning-DB persistence and robustness, the REPRO_TUNING_DB override,
+fingerprint-keyed lookup, plan integration (tuned_from provenance,
+model fallback), and the per-axis link feedback into the analytic model.
+
+The 12-device measured-search acceptance run lives in
+``tests/device_scripts/check_autotune.py`` (see test_multidevice.py).
+"""
+
+import json
+import math
+import warnings
+
+import pytest
+
+from repro.core import cache as core_cache
+from repro.core import plan as core_plan
+from repro.core.autotune import (
+    DB_VERSION,
+    TuningDB,
+    autotune,
+    autotune_stats,
+    db_generation,
+    default_db_path,
+    lookup_measured,
+    plan_db_key,
+    reset_autotune_stats,
+)
+from repro.core.cache import cart_create, device_fingerprint, free_all
+from repro.core.plan import free_plans, plan_all_to_all
+from repro.core.tuning import (
+    ICI,
+    LinkModel,
+    choose_algorithm,
+    choose_chunks,
+    per_axis_links,
+    predict_factorized,
+    predict_overlapped,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state(tmp_path, monkeypatch):
+    """Every test gets an isolated tuning DB (via the env override), empty
+    registries, and zeroed counters."""
+    monkeypatch.setenv("REPRO_TUNING_DB", str(tmp_path / "tuning.json"))
+    free_plans()
+    free_all()
+    reset_autotune_stats()
+    yield
+    free_plans()
+    free_all()
+    reset_autotune_stats()
+
+
+def _record(backend="factorized", order=(0,), n_chunks=1, **extra):
+    rec = {"version": DB_VERSION,
+           "winner": {"backend": backend, "round_order": list(order),
+                      "n_chunks": n_chunks, "median_us": 12.5},
+           "table": [{"backend": backend, "dims": [1],
+                      "round_order": list(order), "n_chunks": n_chunks,
+                      "median_us": 12.5, "eligible": True}]}
+    rec.update(extra)
+    return rec
+
+
+class TestTuningDB:
+    def test_env_override_honored(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNING_DB", str(tmp_path / "other.json"))
+        assert default_db_path() == tmp_path / "other.json"
+        db = TuningDB()
+        assert db.path == tmp_path / "other.json"
+        db.put("k", _record())
+        assert (tmp_path / "other.json").exists()
+
+    def test_round_trip_persistence(self):
+        rec = _record("overlap", (1, 0), 4, measured_links=[
+            {"alpha": 2e-6, "bandwidth": 1e9}])
+        TuningDB().put("some|key", rec)
+        # a fresh handle (fresh process analogue) reads the same record
+        got = TuningDB().get("some|key")
+        assert got == json.loads(json.dumps(rec))   # JSON round-trip exact
+        assert len(TuningDB()) == 1
+
+    def test_put_merges_existing_entries(self):
+        TuningDB().put("a", _record())
+        TuningDB().put("b", _record("direct", (0,)))
+        db = TuningDB()
+        assert db.get("a") is not None and db.get("b") is not None
+
+    def test_missing_file_is_empty(self):
+        assert TuningDB().load() == {}
+
+    @pytest.mark.parametrize("garbage", [
+        "{ not json",                       # corrupt
+        '{"version": 1, "entries": ',       # truncated write
+        '["a", "list"]',                    # wrong shape
+        '{"version": 99, "entries": {}}',   # future version
+    ])
+    def test_corrupt_db_warns_and_loads_empty(self, garbage):
+        db = TuningDB()
+        db.path.write_text(garbage)
+        with pytest.warns(UserWarning, match="tuning DB"):
+            assert db.load() == {}
+
+    def test_corrupt_db_never_crashes_plan_construction(self):
+        TuningDB().path.write_text("\x00garbage\x00")
+        mesh = cart_create(1, (1,), ("x",))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            p = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                                backend="autotune")
+        assert p.tuned_from == "model"   # fell back, did not crash
+
+    def test_clear_deletes_and_missing_ok(self):
+        db = TuningDB()
+        db.put("k", _record())
+        db.clear()
+        assert not db.path.exists()
+        db.clear()   # second delete is a no-op, not an error
+
+    def test_writes_bump_generation(self):
+        g0 = db_generation()
+        TuningDB().put("k", _record())
+        assert db_generation() == g0 + 1
+        TuningDB().clear()
+        assert db_generation() == g0 + 2
+
+
+class TestLookup:
+    def _store_for(self, mesh, block=(8,), dtype="float32", **rec_kw):
+        key = plan_db_key(device_fingerprint(mesh), (1,), ("x",), block,
+                          dtype, "natural")
+        TuningDB().put(key, _record(**rec_kw))
+        return key
+
+    def test_hit_and_miss_counters(self):
+        mesh = cart_create(1, (1,), ("x",))
+        fp = device_fingerprint(mesh)
+        assert lookup_measured(fp, (1,), ("x",), (8,), "float32",
+                               "natural") is None
+        self._store_for(mesh)
+        assert lookup_measured(fp, (1,), ("x",), (8,), "float32",
+                               "natural") is not None
+        stats = autotune_stats()
+        assert stats == {"searches": 0, "timing_executions": 0,
+                         "db_hits": 1, "db_misses": 1}
+
+    def test_fingerprint_mismatch_is_a_miss(self):
+        mesh = cart_create(1, (1,), ("x",))
+        self._store_for(mesh)
+        other_fp = (("not", "this"), ("device", "set"))
+        assert lookup_measured(other_fp, (1,), ("x",), (8,), "float32",
+                               "natural") is None
+        # and through the plan API: falls back to the analytic model
+        key = plan_db_key(other_fp, (1,), ("x",), (8,), "float32",
+                          "natural")
+        assert key != plan_db_key(device_fingerprint(mesh), (1,), ("x",),
+                                  (8,), "float32", "natural")
+
+    def test_malformed_record_is_a_miss(self):
+        mesh = cart_create(1, (1,), ("x",))
+        key = self._store_for(mesh)
+        entries = TuningDB().load()
+        entries[key] = {"winner": {"backend": "quantum"}}
+        TuningDB().put(key, entries[key])
+        with pytest.warns(UserWarning, match="malformed"):
+            assert lookup_measured(device_fingerprint(mesh), (1,), ("x",),
+                                   (8,), "float32", "natural") is None
+
+    def test_key_separates_block_dtype_variant(self):
+        base = plan_db_key(None, (2, 3), ("i", "j"), (8,), "float32",
+                           "natural")
+        assert base != plan_db_key(None, (2, 3), ("i", "j"), (16,),
+                                   "float32", "natural")
+        assert base != plan_db_key(None, (2, 3), ("i", "j"), (8,),
+                                   "int32", "natural")
+        assert base != plan_db_key(None, (2, 3), ("i", "j"), (8,),
+                                   "float32", "paper")
+
+
+class TestPlanIntegration:
+    def test_miss_falls_back_to_model(self):
+        mesh = cart_create(1, (1,), ("x",))
+        p = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                            backend="autotune")
+        assert p.requested_backend == "autotune"
+        assert p.tuned_from == "model" and p.measured is None
+        assert p.describe()["tuned_from"] == "model"
+        assert autotune_stats()["db_misses"] == 1
+
+    def test_autotune_needs_cost_inputs(self):
+        with pytest.raises(ValueError, match="autotune"):
+            plan_all_to_all((2, 2), ("i", "j"), backend="autotune")
+
+    def test_hit_rebuilds_winner_without_measuring(self):
+        mesh = cart_create(1, (1,), ("x",))
+        key = plan_db_key(device_fingerprint(mesh), (1,), ("x",), (8,),
+                          "float32", "natural")
+        TuningDB().put(key, _record("direct", (), 1))
+        p = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                            backend="autotune")
+        assert p.tuned_from == "measured"
+        assert p.backend == "direct"
+        assert p.measured["median_us"] == 12.5
+        assert p.describe()["measured"]["table"][0]["backend"] == "direct"
+        assert autotune_stats()["timing_executions"] == 0
+
+    def test_db_write_invalidates_cached_autotune_plan(self):
+        # The plan LRU may not keep serving a stale "autotune" resolution
+        # after a new measurement (or a delete) lands in the DB.
+        mesh = cart_create(1, (1,), ("x",))
+        p_model = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                                  backend="autotune")
+        assert p_model.tuned_from == "model"
+        key = plan_db_key(device_fingerprint(mesh), (1,), ("x",), (8,),
+                          "float32", "natural")
+        TuningDB().put(key, _record("direct", (), 1))
+        p_meas = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                                 backend="autotune")
+        assert p_meas is not p_model
+        assert p_meas.tuned_from == "measured"
+
+    def test_unusable_record_falls_back(self):
+        # valid-looking record whose round_order cannot apply to this torus
+        mesh = cart_create(1, (1,), ("x",))
+        key = plan_db_key(device_fingerprint(mesh), (1,), ("x",), (8,),
+                          "float32", "natural")
+        TuningDB().put(key, _record("factorized", (3, 1, 0, 2), 1))
+        with pytest.warns(UserWarning, match="unusable"):
+            p = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                                backend="autotune")
+        assert p.tuned_from == "model"
+        # telemetry: the lookup hit is demoted — db_hits counts plans
+        # actually built from measurements, and this one wasn't
+        stats = autotune_stats()
+        assert stats["db_hits"] == 0 and stats["db_misses"] == 1, stats
+
+    def test_measured_links_flow_into_plan(self):
+        mesh = cart_create(1, (1,), ("x",))
+        key = plan_db_key(device_fingerprint(mesh), (1,), ("x",), (8,),
+                          "float32", "natural")
+        TuningDB().put(key, _record(
+            "factorized", (), 1,
+            measured_links=[{"alpha": 3e-6, "bandwidth": 2.5e9}]))
+        p = plan_all_to_all(mesh, ("x",), (8,), "float32",
+                            backend="autotune")
+        assert p.links == (LinkModel(alpha=3e-6, bandwidth=2.5e9),)
+        assert p.describe()["links"] == [{"alpha": 3e-6,
+                                          "bandwidth": 2.5e9}]
+
+    def test_explicit_backend_has_no_provenance(self):
+        p = plan_all_to_all((2, 2), ("i", "j"), (8,), "float32",
+                            backend="factorized")
+        d = p.describe()
+        assert d["tuned_from"] is None and d["measured"] is None
+
+
+class TestAutotuneSearch:
+    """End-to-end measured search on the trivial 1-device torus (cheap —
+    real multi-device timings run in check_autotune.py)."""
+
+    def test_search_persists_and_reconstructs(self):
+        import jax.numpy as jnp
+        mesh = cart_create(1, (1,), ("x",))
+        plan = autotune(mesh, ("x",), (8,), jnp.float32, warmup=1,
+                        repeats=2, fit_links=False)
+        assert plan.tuned_from == "measured"
+        stats = autotune_stats()
+        assert stats["searches"] == 1
+        assert stats["timing_executions"] > 0
+        assert default_db_path().exists()
+        free_plans()
+        reset_autotune_stats()
+        again = plan_all_to_all(mesh, ("x",), (8,), jnp.float32,
+                                backend="autotune")
+        assert again.tuned_from == "measured"
+        assert again.backend == plan.backend
+        assert autotune_stats()["timing_executions"] == 0
+
+    def test_explicit_db_handle_bypasses_default(self, tmp_path):
+        import jax.numpy as jnp
+        db = TuningDB(tmp_path / "explicit.json")
+        mesh = cart_create(1, (1,), ("x",))
+        plan = autotune(mesh, ("x",), (4,), jnp.float32, warmup=0,
+                        repeats=1, fit_links=False,
+                        include_factorizations=False, db=db)
+        assert plan.tuned_from == "measured"
+        assert (tmp_path / "explicit.json").exists()
+        assert not default_db_path().exists()
+
+
+class TestPerAxisLinkFeedback:
+    """Satellite: per-axis LinkModel overrides flow end-to-end through the
+    analytic model (the autotune-measured-bandwidth feedback path)."""
+
+    def test_per_axis_links_broadcast_and_validate(self):
+        assert per_axis_links(ICI, 3) == (ICI, ICI, ICI)
+        two = (ICI, LinkModel(alpha=1e-5, bandwidth=1e9))
+        assert per_axis_links(two, 2) == two
+        with pytest.raises(ValueError, match="links"):
+            per_axis_links(two, 3)
+
+    def test_uniform_scalar_accepted_everywhere(self):
+        dims, b = (4, 4), float(1 << 16)
+        p = math.prod(dims)
+        assert predict_factorized(dims, ICI, b, p) == \
+            predict_factorized(dims, (ICI, ICI), b, p)
+        assert predict_overlapped(dims, ICI, b, p, 3) == \
+            predict_overlapped(dims, (ICI, ICI), b, p, 3)
+        assert choose_chunks(dims, ICI, b) == \
+            choose_chunks(dims, (ICI, ICI), b)
+        assert choose_algorithm(dims, ICI, b).kind == \
+            choose_algorithm(dims, (ICI, ICI), b).kind
+
+    def test_measured_slow_axis_changes_the_choice(self):
+        # A measured slow axis must steer chunking exactly like a DCN
+        # axis would — the feedback autotune records.
+        dims, b = (8, 8), float(1 << 22)
+        slow = LinkModel(alpha=5e-5, bandwidth=1e8)
+        uniform = choose_chunks(dims, ICI, b, max_chunks=8)
+        mixed = choose_chunks(dims, (ICI, slow), b, max_chunks=8)
+        p = math.prod(dims)
+        t_u = predict_overlapped(dims, (ICI, slow), b, p, uniform)
+        t_m = predict_overlapped(dims, (ICI, slow), b, p, mixed)
+        assert t_m <= t_u
+
+    def test_legacy_pipelined_choose_chunks_accepts_overrides(self):
+        from repro.core.pipelined import choose_chunks as legacy_cc
+        from repro.core.tuning import choose_chunks as tuning_cc
+        from repro.core.dims import dims_create
+        b = float(1 << 22)
+        slow = LinkModel(alpha=5e-5, bandwidth=1e8)
+        dims = dims_create(64, 2)
+        assert legacy_cc(64, 2, b, ICI, 8, links=(ICI, slow)) == \
+            tuning_cc(dims, (ICI, slow), b, max_chunks=8)
+        # uniform legacy form unchanged
+        assert legacy_cc(64, 2, b, ICI, 8) == \
+            tuning_cc(dims, ICI, b, max_chunks=8)

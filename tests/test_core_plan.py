@@ -150,6 +150,8 @@ class TestDescribeGolden:
             "blocks_sent_per_device": 2 * 8 - (2 + 4),   # Theorem 1
             "links": [{"alpha": ICI.alpha, "bandwidth": ICI.bandwidth},
                       {"alpha": DCN.alpha, "bandwidth": DCN.bandwidth}],
+            "tuned_from": None,     # explicit backend: no tuning provenance
+            "measured": None,
             "cache": "miss",
         }
 

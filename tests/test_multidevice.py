@@ -34,6 +34,18 @@ def test_plan_equivalence_12dev():
 
 
 @pytest.mark.slow
+def test_autotune_measured_selection_12dev():
+    # Empirical autotuner acceptance: measured winner bit-exact with the
+    # analytic plan, warm-DB reconstruction performs zero timing
+    # executions, deleted DB falls back to the cost model without error.
+    out = run_device_script("check_autotune.py", devices=12)
+    assert "OK autotuned == analytic bit-exact" in out
+    assert "zero measurements" in out
+    assert "OK deleted DB falls back" in out
+    assert "OK subset-axes autotune" in out
+
+
+@pytest.mark.slow
 def test_overlap_engine_parity():
     out = run_device_script("check_overlap.py", devices=8)
     assert "OK overlap==factorized==direct" in out
