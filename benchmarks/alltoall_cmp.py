@@ -20,6 +20,12 @@ amortization* on our stack (Listings 1–2: setup once, reuse forever):
 * ``plan_cached_us`` — the same call hitting the LRU plan registry, i.e.
   the per-call cost every steady-state all-to-all actually pays.
 
+The ``ragged[d=2]`` column measures the bucketed Alltoallv subsystem
+(core.ragged): ``block_elems`` is the per-pair ``max_count`` of int32
+rows, counts are a fixed non-uniform matrix, and the recorded ``seconds``
+covers the counts phase plus the bucket-padded data rounds — with the
+achieved ``occupancy`` (useful rows / bucketed rows) alongside.
+
 The ``autotune[d=2]`` column prices the measured-selection pipeline
 (core.autotune) against an isolated throwaway tuning DB:
 
@@ -48,10 +54,13 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import dims_create
 from repro.core.autotune import TuningDB, autotune
 from repro.core.cache import cart_create, free_all
-from repro.core.plan import free_plans, plan_all_to_all, plan_cache_stats
+from repro.core.plan import free_plans, plan_all_to_all, plan_cache_stats, \
+    plan_ragged_all_to_all
 
 ELEMENTS = (1, 10, 100, 1000, 10000)
 WARMUP, REPS = 8, 40
@@ -91,6 +100,64 @@ def bench_plan_construction(mesh, names, nelem, backend, **plan_kw):
         t0 = time.perf_counter()
         for _ in range(PLAN_REPS):
             plan_all_to_all(mesh, names, **kw)
+        cached = min(cached, (time.perf_counter() - t0) / PLAN_REPS)
+    return cold, cached
+
+
+def bench_ragged(p_procs, rows):
+    """The ragged (Alltoallv) column: bucketed execution on the d=2
+    factorization with non-uniform per-pair counts.
+
+    ``block_elems`` plays the role of ``max_count`` (int32 rows per pair,
+    so the bucket is its power-of-two round-up); counts are a fixed
+    pseudo-random matrix in [0, max_count], giving the recorded
+    ``occupancy`` ~ mean/bucket.  ``seconds`` therefore includes the
+    counts phase + the bucket-padded data rounds — the end-to-end price
+    ``tuning.predict_ragged`` models."""
+    dims = dims_create(p_procs, 2)
+    names = tuple(f"t{i}" for i in range(len(dims)))
+    mesh = cart_create(p_procs, tuple(reversed(dims)), names)
+    rng = np.random.default_rng(0)
+    for nelem in ELEMENTS:
+        plan = plan_ragged_all_to_all(mesh, names, (), jnp.int32,
+                                      max_count=nelem)
+        counts = jnp.asarray(rng.integers(0, nelem + 1,
+                                          size=(p_procs, p_procs)),
+                             jnp.int32)
+        x = jnp.ones((p_procs, p_procs, plan.bucket), jnp.int32)
+        fn = plan.host_fn()
+        sec = bench(lambda x: fn(x, counts), x)
+        cold, cached = bench_ragged_plan_construction(mesh, names, nelem)
+        occ = float(np.asarray(counts).mean() / plan.bucket)
+        rows.append({"impl": "ragged[d=2]", "dims": list(dims),
+                     "block_elems": nelem, "seconds": sec,
+                     "bucket": plan.bucket, "occupancy": occ,
+                     "plan_cold_us": cold * 1e6,
+                     "plan_cached_us": cached * 1e6,
+                     "plan": plan.describe()})
+        print(f"alltoall_cmp,ragged[d=2],{nelem},{sec * 1e6:.1f},"
+              f"bucket={plan.bucket},occupancy={occ:.3f},"
+              f"plan_cold={cold * 1e6:.1f}us,"
+              f"plan_cached={cached * 1e6:.2f}us")
+
+
+def bench_ragged_plan_construction(mesh, names, max_count):
+    """Ragged analogue of ``bench_plan_construction``: cold resolves the
+    data + counts plans and the bucket; cached is the LRU fetch of the
+    composed RaggedA2APlan."""
+    kw = dict(row_shape=(), dtype=jnp.int32, max_count=max_count)
+    cold = float("inf")
+    for _ in range(8):
+        free_plans()
+        free_all()
+        t0 = time.perf_counter()
+        plan_ragged_all_to_all(mesh, names, **kw)
+        cold = min(cold, time.perf_counter() - t0)
+    cached = float("inf")
+    for _ in range(8):
+        t0 = time.perf_counter()
+        for _ in range(PLAN_REPS):
+            plan_ragged_all_to_all(mesh, names, **kw)
         cached = min(cached, (time.perf_counter() - t0) / PLAN_REPS)
     return cold, cached
 
@@ -173,6 +240,7 @@ def main(argv=None):
                   f"plan_cold={cold * 1e6:.1f}us,"
                   f"plan_cached={cached * 1e6:.2f}us")
 
+    bench_ragged(p_procs, rows)
     bench_autotune(p_procs, rows)
 
     stats = plan_cache_stats()

@@ -7,8 +7,8 @@ devices and compares its fresh JSON against
 timings, which are machine-dependent:
 
 * the set of ``impl`` columns (direct, factorized[d=k], overlap[d=2],
-  autotune[d=2]) must match exactly — a silently dropped or renamed
-  backend column is the regression this guard exists for;
+  ragged[d=2], autotune[d=2]) must match exactly — a silently dropped or
+  renamed backend column is the regression this guard exists for;
 * per column, the row key set and the ``plan`` (describe()) key set must
   match — additions and removals both fail, so describe()/artifact
   schema changes have to land together with a regenerated golden;
@@ -25,10 +25,24 @@ from pathlib import Path
 
 GOLDEN = Path(__file__).resolve().parent / "artifacts" / "alltoall_cmp.json"
 
+# Every row must carry these to be classifiable at all; a row missing one
+# is reported as a readable per-row diagnosis (row index + the keys it
+# does have), never as a bare KeyError traceback.
+REQUIRED_ROW_KEYS = ("impl", "block_elems")
 
-def schema(rows: list[dict]) -> dict[str, dict]:
+
+def schema(rows: list[dict], problems: list[str] | None = None,
+           label: str = "") -> dict[str, dict]:
     cols: dict[str, dict] = {}
-    for r in rows:
+    where = f"{label} " if label else ""
+    for i, r in enumerate(rows):
+        missing = [k for k in REQUIRED_ROW_KEYS if k not in r]
+        if missing:
+            if problems is not None:
+                problems.append(
+                    f"{where}row {i}: missing required keys {missing} "
+                    f"(has: {sorted(r)})")
+            continue
         col = cols.get(r["impl"])
         if col is None:
             col = cols[r["impl"]] = {"keys": set(r), "keys_every": set(r),
@@ -64,9 +78,11 @@ def main(argv) -> int:
         return 2
     fresh_path = Path(argv[0])
     golden_path = Path(argv[1]) if len(argv) == 2 else GOLDEN
-    fresh = schema(json.loads(fresh_path.read_text()))
-    golden = schema(json.loads(golden_path.read_text()))
-    problems = diff(fresh, golden)
+    problems: list[str] = []
+    fresh = schema(json.loads(fresh_path.read_text()), problems, "fresh")
+    golden = schema(json.loads(golden_path.read_text()), problems,
+                    "golden")
+    problems += diff(fresh, golden)
     if problems:
         print("alltoall_cmp schema drift vs committed golden "
               f"({golden_path}):", file=sys.stderr)

@@ -24,11 +24,19 @@ from .cache import (
 )
 from .plan import (
     A2APlan,
+    RaggedA2APlan,
     free_plans,
     plan_all_to_all,
     plan_cache_entries,
     plan_cache_stats,
+    plan_ragged_all_to_all,
     set_plan_cache_capacity,
+)
+from .ragged import (
+    bucket_occupancy,
+    exact_alltoallv,
+    next_pow2,
+    torus_rank,
 )
 from .autotune import (
     TuningDB,
@@ -43,7 +51,9 @@ from .simulator import (
     example_index_table,
     round_datatype,
     simulate_direct_alltoall,
+    simulate_direct_alltoallv,
     simulate_factorized_alltoall,
+    simulate_factorized_alltoallv,
 )
 from .tuning import (
     DCN,
@@ -52,8 +62,10 @@ from .tuning import (
     Schedule,
     choose_algorithm,
     choose_chunks,
+    choose_ragged_algorithm,
     crossover_block_bytes,
     predict_overlapped,
+    predict_ragged,
 )
 from .guidelines import Measurement, Violation, check_guidelines, format_report
 from .hlo_inspect import collective_bytes_of, interleave_report, parse_hlo
@@ -67,18 +79,23 @@ from .overlap import (
 
 __all__ = [
     "A2APlan", "DCN", "ICI", "LinkModel", "Measurement", "PAPER_EXAMPLES",
-    "Schedule", "TorusFactorization", "TuningDB", "Violation", "autotune",
-    "autotune_stats", "cache_stats", "cart_create", "check_guidelines",
-    "choose_algorithm", "choose_chunks", "collective_bytes_of",
+    "RaggedA2APlan", "Schedule", "TorusFactorization", "TuningDB",
+    "Violation", "autotune", "autotune_stats", "bucket_occupancy",
+    "cache_stats", "cart_create", "check_guidelines", "choose_algorithm",
+    "choose_chunks", "choose_ragged_algorithm", "collective_bytes_of",
     "crossover_block_bytes", "default_db_path", "dims_create",
-    "direct_all_to_all", "direct_all_to_all_tiled", "example_index_table",
-    "factorized_all_to_all", "factorized_all_to_all_tiled", "format_report",
-    "free", "free_all", "free_plans", "get_factorization", "host_alltoall",
-    "interleave_report", "max_dims", "overlapped_all_to_all",
+    "direct_all_to_all", "direct_all_to_all_tiled", "exact_alltoallv",
+    "example_index_table", "factorized_all_to_all",
+    "factorized_all_to_all_tiled", "format_report", "free", "free_all",
+    "free_plans", "get_factorization", "host_alltoall",
+    "interleave_report", "max_dims", "next_pow2", "overlapped_all_to_all",
     "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
     "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",
-    "plan_cache_stats", "plan_db_key", "predict_overlapped",
-    "prime_factorization", "reset_autotune_stats", "round_datatype",
-    "run_pipelined", "set_cache_capacity", "set_plan_cache_capacity",
-    "simulate_direct_alltoall", "simulate_factorized_alltoall",
+    "plan_cache_stats", "plan_db_key", "plan_ragged_all_to_all",
+    "predict_overlapped", "predict_ragged", "prime_factorization",
+    "reset_autotune_stats", "round_datatype", "run_pipelined",
+    "set_cache_capacity", "set_plan_cache_capacity",
+    "simulate_direct_alltoall", "simulate_direct_alltoallv",
+    "simulate_factorized_alltoall", "simulate_factorized_alltoallv",
+    "torus_rank",
 ]

@@ -32,6 +32,11 @@ plan and warn).
 
 ``plan.describe()`` returns a stable dict (dims, backend, predicted cost,
 chunks, cache hit/miss) for logging, goldens, and the dry-run artifacts.
+
+:func:`plan_ragged_all_to_all` / :class:`RaggedA2APlan` extend the same
+plan-object design to MPI_Alltoallv semantics (non-uniform per-pair
+counts): a tiny int32 counts plan plus a bucket-padded data plan over the
+identical torus, cached in the same registry — see ``core.ragged``.
 """
 
 from __future__ import annotations
@@ -229,6 +234,7 @@ class A2APlan:
         """Stable, JSON-serializable summary of the resolved plan."""
         sched = self.schedule
         return {
+            "kind": "dense",
             "axis_names": list(self.axis_names),
             "dims": list(self.dims),
             "p": self.p,
@@ -453,6 +459,293 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
                    else tuple(block_shape), dtype=dtype, links=link_models,
                    schedule=sched, mesh=mesh, tuned_from=tuned_from,
                    measured=measured)
+    _PLANS.put(key, plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Ragged (MPI_Alltoallv) plans
+# ---------------------------------------------------------------------------
+
+
+class RaggedA2APlan:
+    """A resolved, reusable ragged all-to-all (Alltoallv) plan.
+
+    Construct via :func:`plan_ragged_all_to_all`; never directly.  The
+    plan composes two dense :class:`A2APlan` resolutions over the same
+    torus — the tiny int32 *counts* plan and the bucket-padded *data*
+    plan — plus the bucket itself (the power-of-two row bound that keeps
+    every dimension-wise round fixed-shape and jit-stable; see
+    ``core.ragged``).  Like dense plans it is a static Python object,
+    cached in the same LRU registry, free to close over inside
+    ``shard_map``/``jit``.
+    """
+
+    def __init__(self, data: A2APlan, counts: A2APlan, *, max_count: int,
+                 avg_count: float, row_shape: tuple[int, ...], dtype,
+                 predicted_seconds: float | None):
+        self.data = data
+        self.counts_plan = counts
+        self.max_count = max_count
+        self.avg_count = avg_count
+        self.row_shape = row_shape
+        self.dtype = dtype
+        self.predicted_seconds = predicted_seconds
+        self._from_cache = False
+        self._fetches = 1
+        self._host_fns: dict[Mesh, object] = {}
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self.data.axis_names
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.data.dims
+
+    @property
+    def p(self) -> int:
+        return self.data.p
+
+    @property
+    def d(self) -> int:
+        return self.data.d
+
+    @property
+    def bucket(self) -> int:
+        return self.data.block_shape[0]
+
+    @property
+    def backend(self) -> str:
+        return self.data.backend
+
+    @property
+    def variant(self) -> str:
+        return self.data.variant
+
+    @property
+    def n_chunks(self) -> int:
+        return self.data.n_chunks
+
+    @property
+    def tuned_from(self) -> str | None:
+        return self.data.tuned_from
+
+    @property
+    def row_bytes(self) -> int:
+        return math.prod(self.row_shape) * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def expected_occupancy(self) -> float:
+        return float(self.avg_count) / float(self.bucket)
+
+    # -- execution surface (inside shard_map) ------------------------------
+
+    def counts_matrix(self, send_counts):
+        """The counts phase alone: ``(p,)`` int32 send counts -> the full
+        ``(p, p)`` matrix, identical on every device."""
+        from .ragged import _counts_matrix_impl
+        return _counts_matrix_impl(send_counts, self.counts_plan)
+
+    def forward(self, x, send_counts):
+        """Bucketed ragged all-to-all: ``x`` is ``(p, m, *row)`` with
+        ``m <= bucket``, block ``i``'s rows destined for torus rank ``i``;
+        returns ``(recv, recv_counts)`` — ``recv[i]`` the ``(bucket,
+        *row)`` window received from rank ``i``."""
+        from .ragged import _bucketed_impl
+        return _bucketed_impl(x, send_counts, data_plan=self.data,
+                              counts_plan=self.counts_plan,
+                              axis_names=self.axis_names)
+
+    def reverse(self, x, send_counts):
+        """The combine-direction bucketed exchange (drain round order);
+        ``send_counts`` is typically the ``recv_counts`` of the matching
+        ``forward``."""
+        from .ragged import _bucketed_impl
+        return _bucketed_impl(x, send_counts, data_plan=self.data,
+                              counts_plan=self.counts_plan,
+                              axis_names=self.axis_names, reverse=True)
+
+    def occupancy(self, send_counts):
+        """Measured occupancy of one call (traced scalar): useful rows
+        over ``p * bucket`` padded rows."""
+        from .ragged import bucket_occupancy
+        return bucket_occupancy(send_counts, self.bucket)
+
+    # -- host-level paths --------------------------------------------------
+
+    def exact(self, rows):
+        """The exact two-phase host/debug path (``core.ragged
+        .exact_alltoallv``): global nested ``rows[s][d]`` arrays in, exact
+        per-pair arrays out — no bucket, no padding.  Runs the plan's
+        forward round order over the active dimensions."""
+        from .ragged import exact_alltoallv
+        active = [i for i, Dk in enumerate(self.dims) if Dk > 1]
+        trivial = [i for i, Dk in enumerate(self.dims) if Dk == 1]
+        full_order = [active[k] for k in self.data.order] + trivial
+        return exact_alltoallv(rows, self.dims, round_order=full_order)
+
+    def host_fn(self, mesh: Mesh | None = None):
+        """Jitted host-level ragged all-to-all over global ``(p, p,
+        bucket, *row)`` data and ``(p, p)`` int32 counts operands
+        (``x[r, i]`` = rank r's bucket window for rank i); returns the
+        exchanged windows plus per-rank recv counts."""
+        mesh = self.data._mesh if mesh is None else mesh
+        if mesh is None:
+            raise ValueError("plan was built without a Mesh; pass one")
+        if mesh not in self._host_fns:
+            import jax
+            axes = tuple(reversed(self.axis_names))
+            x_spec = P(axes)
+            c_spec = P(axes)
+
+            def local(x, c):    # x: (1, p, bucket, *row); c: (1, p)
+                recv, rc = self.forward(x[0], c[0])
+                return recv[None], rc[None]
+
+            self._host_fns[mesh] = jax.jit(jax.shard_map(
+                local, mesh=mesh, in_specs=(x_spec, c_spec),
+                out_specs=(x_spec, c_spec)))
+        return self._host_fns[mesh]
+
+    # -- introspection -----------------------------------------------------
+
+    def describe(self) -> dict:
+        """Stable, JSON-serializable summary of the resolved ragged plan.
+
+        ``expected_occupancy`` is the plan-time estimate ``avg_count /
+        bucket`` — the useful fraction of the bucketed data phase's
+        traffic (1.0 means no padding waste); per-call measured occupancy
+        comes from :meth:`occupancy`.  ``tuned_from`` is the data plan's
+        provenance ("measured" under a tuning-DB hit, "model" for the
+        analytic choice, None for an explicit backend).
+        """
+        return {
+            "kind": "ragged",
+            "axis_names": list(self.axis_names),
+            "dims": list(self.dims),
+            "p": self.p,
+            "d": self.d,
+            "backend": self.backend,
+            "requested_backend": self.data.requested_backend,
+            "variant": self.variant,
+            "round_order": list(self.data.order),
+            "reverse_round_order": list(self.data.rev_order),
+            "n_chunks": self.n_chunks,
+            "row_shape": list(self.row_shape),
+            "dtype": jnp.dtype(self.dtype).name,
+            "row_bytes": self.row_bytes,
+            "max_count": self.max_count,
+            "avg_count": self.avg_count,
+            "bucket": self.bucket,
+            "bucket_block_bytes": self.data.block_bytes,
+            "expected_occupancy": self.expected_occupancy,
+            "counts_backend": self.counts_plan.backend,
+            "counts_block_bytes": self.counts_plan.block_bytes,
+            "predicted_seconds": self.predicted_seconds,
+            "blocks_sent_per_device": self.data.fact
+            .blocks_sent_per_device(),
+            "links": [{"alpha": l.alpha, "bandwidth": l.bandwidth}
+                      for l in self.data.links],
+            "tuned_from": self.tuned_from,
+            "measured": self.data.measured,
+            "cache": "hit" if self._from_cache else "miss",
+        }
+
+    def __repr__(self):
+        return (f"RaggedA2APlan(dims={self.dims}, axes={self.axis_names}, "
+                f"backend={self.backend!r}, bucket={self.bucket}, "
+                f"max_count={self.max_count})")
+
+
+def plan_ragged_all_to_all(mesh_or_axis_dims, axis_names, row_shape=(),
+                           dtype="float32", *, max_count: int,
+                           avg_count: float | None = None,
+                           backend: str = "tuned", variant: str = "natural",
+                           round_order=None, reverse_round_order=None,
+                           n_chunks: int = 0, max_chunks: int = 8,
+                           links=None, compute_seconds: float = 0.0,
+                           db=None) -> RaggedA2APlan:
+    """Build (or fetch from the LRU registry) a :class:`RaggedA2APlan`.
+
+    Args mirror :func:`plan_all_to_all` with the ragged additions:
+
+      row_shape, dtype: shape/dtype of ONE ragged row (the unit the
+        per-pair counts count); ``()`` means scalar rows.
+      max_count: static upper bound on any single ``send_counts`` entry —
+        the jit-stability contract.  The bucket is its power-of-two
+        round-up, so every dimension-wise exchange has a fixed shape.
+      avg_count: expected mean per-pair count, for the plan's
+        ``expected_occupancy`` estimate and the tuner's ragged cost term
+        (default: ``max_count``, i.e. occupancy = max_count/bucket).
+      backend: resolves the *data* plan (padded blocks of ``(bucket,
+        *row_shape)``) exactly like the dense API — "tuned" prices
+        candidates at the padded size (``tuning.choose_ragged_algorithm``
+        semantics), "autotune" replays the measured winner recorded for
+        the padded block shape.  The counts plan is always resolved as
+        "tuned" over its ``(p,)`` int32 block.
+    """
+    axis_names = _as_tuple(axis_names)
+    if isinstance(mesh_or_axis_dims, Mesh):
+        dims = tuple(mesh_or_axis_dims.shape[n] for n in axis_names)
+        dev_key = device_fingerprint(mesh_or_axis_dims)
+    else:
+        dims = tuple(int(s) for s in mesh_or_axis_dims)
+        if len(dims) != len(axis_names):
+            raise ValueError(f"{len(dims)} dims for {len(axis_names)} axes")
+        dev_key = None
+    from .ragged import next_pow2
+    max_count = int(max_count)
+    # Power-of-two bucket: any static bound keeps the rounds fixed-shape,
+    # but snapping to pow2 bounds the set of distinct compiled shapes (and
+    # plan-cache entries) across workloads whose max_count drifts — the
+    # padding it adds beyond max_count is reported in expected_occupancy.
+    bucket = next_pow2(max_count)
+    avg = float(max_count if avg_count is None else avg_count)
+    if not 0.0 < avg <= bucket:
+        raise ValueError(f"avg_count {avg} outside (0, bucket={bucket}]")
+    row_shape = tuple(int(s) for s in row_shape)
+    p = math.prod(dims)
+
+    links_key = None if links is None else tuple(links)
+    key = ("ragged", dev_key, dims, axis_names, row_shape,
+           jnp.dtype(dtype).name, max_count, avg, backend, variant,
+           None if round_order is None else tuple(round_order),
+           None if reverse_round_order is None
+           else tuple(reverse_round_order),
+           int(n_chunks), int(max_chunks), links_key,
+           float(compute_seconds))
+    if backend == "autotune":
+        from .autotune import get_default_db
+        db = db if db is not None else get_default_db()
+        key = key + (db.path_key, db.generation())
+    cached = _PLANS.get(key)
+    if cached is not None:
+        cached._from_cache = True
+        cached._fetches += 1
+        return cached
+
+    data = plan_all_to_all(mesh_or_axis_dims, axis_names,
+                           (bucket,) + row_shape, dtype, backend=backend,
+                           variant=variant, round_order=round_order,
+                           reverse_round_order=reverse_round_order,
+                           n_chunks=n_chunks, max_chunks=max_chunks,
+                           links=links, compute_seconds=compute_seconds,
+                           db=db)
+    counts = plan_all_to_all(mesh_or_axis_dims, axis_names, (p,), jnp.int32,
+                             backend="tuned", variant=variant,
+                             round_order=round_order,
+                             reverse_round_order=reverse_round_order,
+                             max_chunks=1, links=links)
+    predicted = None
+    if data.schedule is not None and counts.schedule is not None:
+        predicted = data.schedule.predicted_seconds \
+            + counts.schedule.predicted_seconds
+    plan = RaggedA2APlan(data, counts, max_count=max_count, avg_count=avg,
+                         row_shape=row_shape, dtype=dtype,
+                         predicted_seconds=predicted)
     _PLANS.put(key, plan)
     return plan
 

@@ -1,0 +1,248 @@
+"""Ragged (MPI_Alltoallv) all-to-all on the factorized torus.
+
+The paper's Algorithm 1 moves block *slots*, never inspecting their
+contents — so the dimension-wise decomposition extends unchanged to
+non-uniform per-partner volumes (Träff et al.'s isomorphic sparse
+collectives).  This module is that extension: the collective family
+between ``MPI_Alltoall`` (``core.factorized``) and real applications
+whose exchanges are ragged (dropless MoE dispatch, Alltoallv-based FFT
+transposes à la Dalcin & Mortensen).
+
+Execution modes (surfaced through ``core.plan.RaggedA2APlan``):
+
+* **counts phase** — before any data moves, every device learns the full
+  ``p x p`` count matrix via one *tiny* dense int32 all-to-all through
+  the layer's existing ``A2APlan``: each device contributes its send-count
+  row as every one of its ``p`` blocks, so block ``i`` of the result is
+  rank ``i``'s row — the whole matrix, from one fixed-shape collective.
+
+* **bucketed** (``_bucketed_impl``) — the jit path.  Every block is
+  rounded up to a shared power-of-two ``bucket`` of rows, so each of the
+  d dimension-wise exchanges stays a *fixed-shape, zero-copy,
+  double-buffered* round (the dense plan's kernels, bit-for-bit); shapes
+  are jit-stable because the bucket is resolved at plan time from
+  ``max_count``, never from traced counts.  The price is padding,
+  reported as an *occupancy* statistic (useful rows / bucketed rows) —
+  ``tuning.predict_ragged`` prices exactly that trade.
+
+* **exact** (``exact_alltoallv``) — the two-phase host/debug path: phase
+  one exchanges counts, phase two runs the d rounds with *true* ragged
+  composite messages (variable-length slot payloads concatenated in
+  round-datatype order, per-peer displacements derived from the counts
+  matrix — ``MPI_Alltoallv`` per round).  No padding, no jit; validated
+  slot-for-slot against the ``core.simulator`` oracle.
+
+Data-layout contract for the bucketed mode: the canonical operand packs
+each destination's rows at the front of its bucket window
+(``x[i, :send_counts[i]]`` valid, remainder zeros).  The rounds transport
+whole bucket windows bit-exactly, so callers may use any within-window
+layout (MoE keeps expert-strided slots) — ``send_counts`` feeds the
+counts phase and occupancy accounting either way.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .factorized import _as_tuple
+from .simulator import rank_to_coords, round_datatype
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1) — the shared bucket size."""
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"bucket bound must be >= 1, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+def torus_rank(axis_names) -> jnp.ndarray:
+    """This device's torus rank (traced int32), fastest digit first —
+    usable only inside ``shard_map`` over the named axes."""
+    axis_names = _as_tuple(axis_names)
+    rank, stride = jnp.int32(0), 1
+    for name in axis_names:
+        rank = rank + lax.axis_index(name).astype(jnp.int32) * stride
+        stride *= lax.axis_size(name)
+    return rank
+
+
+# ---------------------------------------------------------------------------
+# Counts phase
+# ---------------------------------------------------------------------------
+
+
+def _counts_matrix_impl(send_counts, counts_plan):
+    """One tiny dense all-to-all -> the full (p, p) count matrix.
+
+    ``send_counts``: this device's (p,) int32 row (counts destined to each
+    torus rank).  Every one of the ``p`` blocks we contribute is that same
+    row, so after the exchange block ``i`` is rank ``i``'s row and the
+    stacked result ``M[i, j]`` = elements rank ``i`` sends rank ``j`` —
+    identical on every device.
+    """
+    p = counts_plan.p
+    row = jnp.asarray(send_counts, jnp.int32)
+    if row.shape != (p,):
+        raise ValueError(f"send_counts shape {row.shape} != ({p},)")
+    return counts_plan.forward(jnp.broadcast_to(row, (p, p)))
+
+
+def _recv_counts_from_matrix(matrix, axis_names):
+    """Column of the count matrix for this device: ``M[i, r]`` = rows rank
+    ``i`` sends here = rows received from rank ``i``."""
+    return jnp.take(matrix, torus_rank(axis_names), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed execution mode (jit path)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to_bucket(x, bucket: int):
+    """Zero-pad the per-block row axis (axis 1) up to the bucket size."""
+    m = x.shape[1]
+    if m > bucket:
+        raise ValueError(f"{m} rows per block exceed the plan bucket "
+                         f"{bucket}; rebuild the plan with max_count>={m}")
+    if m == bucket:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, bucket - m)
+    return jnp.pad(x, pad)
+
+
+def _bucketed_impl(x, send_counts, *, data_plan, counts_plan, axis_names,
+                   reverse: bool = False):
+    """Fixed-shape ragged all-to-all: counts phase + bucket-padded rounds.
+
+    Args:
+      x: ``(p, m, *row)`` send blocks, ``m <= bucket``; block ``i`` holds
+        the rows destined for torus rank ``i`` (``send_counts[i]`` of them
+        under the canonical packed layout).
+      send_counts: ``(p,)`` int32.
+      data_plan / counts_plan: the resolved dense plans (block shapes
+        ``(bucket, *row)`` and ``(p,)`` int32 respectively).
+      reverse: run the data rounds in the drain order (combine direction).
+
+    Returns ``(recv, recv_counts)``: ``recv[i]`` is the ``(bucket, *row)``
+    window received from rank ``i`` (rows beyond ``recv_counts[i]`` are
+    the sender's padding), ``recv_counts`` the matching ``(p,)`` int32.
+    """
+    p = data_plan.p
+    if x.shape[0] != p:
+        raise ValueError(f"leading dim {x.shape[0]} != p={p}")
+    bucket = data_plan.block_shape[0]
+    matrix = _counts_matrix_impl(send_counts, counts_plan)
+    recv_counts = _recv_counts_from_matrix(matrix, axis_names)
+    padded = _pad_to_bucket(x, bucket)
+    run = data_plan.reverse if reverse else data_plan.forward
+    return run(padded), recv_counts
+
+
+def bucket_occupancy(counts, bucket: int):
+    """Useful fraction of the bucketed exchange's traffic (traced ok):
+    total ragged rows over total padded rows."""
+    counts = jnp.asarray(counts)
+    return jnp.sum(counts) / (counts.size * bucket)
+
+
+# ---------------------------------------------------------------------------
+# Exact two-phase mode (host/debug path)
+# ---------------------------------------------------------------------------
+
+
+def exact_alltoallv(rows, dims, round_order=None):
+    """Exact global Alltoallv over the torus — host/debug path, no padding.
+
+    Args:
+      rows: nested list, ``rows[s][d]`` = array-like of shape
+        ``(counts[s][d], *row)`` — rank ``s``'s payload for rank ``d``
+        (zero-length arrays allowed).
+      dims: torus factor per dimension, fastest digit first.
+      round_order: optional permutation of ``range(d)``.
+
+    Phase one derives the count matrix (the host analogue of the counts
+    collective); phase two runs Algorithm 1's d rounds with true ragged
+    messages: in round ``k`` each rank sends peer ``j`` the concatenation
+    of the variable-length slots at round-datatype positions
+    ``positions + j * extent`` — per-peer counts and displacements
+    straight from the evolving count matrix, an ``MPI_Alltoallv`` per
+    dimension.  Returns ``(recv, counts)``: ``recv[r][s]`` = the rows rank
+    ``r`` received from rank ``s``, and the phase-one count matrix.
+    """
+    dims = tuple(int(s) for s in dims)
+    d = len(dims)
+    p = math.prod(dims)
+    if len(rows) != p or any(len(per_dst) != p for per_dst in rows):
+        raise ValueError(f"rows must be a {p}x{p} nested list")
+    order = tuple(round_order) if round_order is not None \
+        else tuple(range(d))
+    if sorted(order) != list(range(d)):
+        raise ValueError(f"round_order {order} is not a permutation "
+                         f"of 0..{d - 1}")
+
+    # Phase 1: the count matrix (every rank's send-count row).
+    counts = [[int(np.shape(rows[s][t])[0]) for t in range(p)]
+              for s in range(p)]
+
+    # Phase 2: d ragged rounds at slot granularity.  buf[r][b] is the
+    # payload currently in slot b of rank r's flat buffer; a round moves
+    # slots between group members exactly as the dense algorithm does,
+    # composing each peer message from its slots' (variable) lengths.
+    buf = {r: [np.asarray(rows[r][t]) for t in range(p)] for r in range(p)}
+    coords = {r: rank_to_coords(r, dims) for r in range(p)}
+    for k in order:
+        positions, extent = round_datatype(dims, k)
+        groups: dict[tuple, list[int]] = {}
+        for r in range(p):
+            key = tuple(c for i, c in enumerate(coords[r]) if i != k)
+            groups.setdefault(key, []).append(r)
+        staged = {}
+        for members in groups.values():
+            members.sort(key=lambda r: coords[r][k])
+            for g_r, r in enumerate(members):
+                newbuf = [None] * p
+                for g_s, s in enumerate(members):
+                    # the composite message s -> r: slots positions +
+                    # g_r*extent on the sender, landing at positions +
+                    # g_s*extent on the receiver (variable per-slot size)
+                    for pos in positions:
+                        newbuf[pos + g_s * extent] = \
+                            buf[s][pos + g_r * extent]
+                staged[r] = newbuf
+        for r, newbuf in staged.items():
+            buf[r] = newbuf
+
+    recv = [[buf[r][s] for s in range(p)] for r in range(p)]
+    # Postcondition (the MPI contract): slot s of rank r's recvbuf is
+    # exactly what s addressed to r, order preserved.
+    for r in range(p):
+        for s in range(p):
+            if np.shape(recv[r][s])[0] != counts[s][r]:
+                raise AssertionError(
+                    f"exact alltoallv postcondition violated at "
+                    f"recv[{r}][{s}]")
+    return recv, counts
+
+
+def exact_round_message_elements(dims, counts, k: int):
+    """Elements of the round-``k`` composite message rank 0 sends each
+    peer, from the *initial* count matrix — the per-peer ``scounts`` of
+    the first round's Alltoallv (introspection/debug helper)."""
+    positions, extent = round_datatype(tuple(dims), k)
+    return [sum(counts[0][pos + j * extent] for pos in positions)
+            for j in range(dims[k])]
+
+
+__all__ = [
+    "bucket_occupancy",
+    "exact_alltoallv",
+    "exact_round_message_elements",
+    "next_pow2",
+    "torus_rank",
+]

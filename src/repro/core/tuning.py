@@ -136,6 +136,65 @@ def predict_overlapped(dims, links, block_bytes: float, p: int,
         + min(t_comm, compute_seconds) / n
 
 
+def predict_ragged(dims, links, row_bytes: float, bucket: int, p: int, *,
+                   occupancy: float = 1.0, counts_bytes: int = 4,
+                   n_chunks: int = 1, compute_seconds: float = 0.0) -> float:
+    """Alpha-beta prediction for the bucketed ragged (Alltoallv) exchange.
+
+    Two phases: the tiny int32 counts all-to-all (each device's block is
+    its full ``p``-entry count row — ``p * counts_bytes`` per block), then
+    the data rounds at the padded block size ``bucket * row_bytes``.  The
+    bucket relates to the *useful* payload through the expected occupancy
+    ``avg_count / bucket``: the padded data phase costs the dense schedule
+    at the average ragged block divided by the occupancy — i.e. expected
+    occupancy x this prediction == the dense cost of the useful bytes, the
+    waste the bucketed executor reports and the tuner prices.
+
+    ``n_chunks > 1`` prices the data phase through the chunked/pipelined
+    schedule (``predict_overlapped``) instead, matching a plan whose data
+    backend resolved to overlap/pipelined.
+    """
+    links = per_axis_links(links, len(dims))
+    if not 0.0 < occupancy <= 1.0:
+        raise ValueError(f"occupancy must be in (0, 1], got {occupancy}")
+    t_counts = predict_factorized(dims, links, p * float(counts_bytes), p)
+    padded = float(bucket) * float(row_bytes)
+    if n_chunks > 1:
+        t_data = predict_overlapped(dims, links, padded, p, n_chunks,
+                                    compute_seconds)
+    else:
+        t_data = predict_factorized(dims, links, padded, p) + compute_seconds
+    return t_counts + t_data
+
+
+def choose_ragged_algorithm(axis_dims, axis_links, row_bytes: float,
+                            bucket: int, *, max_chunks: int = 1,
+                            compute_seconds: float = 0.0) -> Schedule:
+    """Pick the data-phase backend for a bucketed ragged exchange.
+
+    The data rounds are shape-identical to a dense all-to-all of
+    ``bucket * row_bytes`` blocks, so the dense policy applies verbatim at
+    the padded size; the counts phase is priced by the same policy over
+    its ``(p,)`` int32 block (unchunked — pipelining a counts exchange is
+    pointless) and added to the winning schedule's prediction, so ragged
+    candidates are priced end to end and this function agrees exactly
+    with how ``plan_ragged_all_to_all(backend="tuned")`` resolves both
+    sub-plans (``backend="autotune"`` resolves the data phase through the
+    measured records keyed by the padded block shape instead).
+    """
+    axis_links = per_axis_links(axis_links, len(axis_dims))
+    p = math.prod(axis_dims)
+    sched = choose_algorithm(axis_dims, axis_links,
+                             float(bucket) * float(row_bytes),
+                             max_chunks=max_chunks,
+                             compute_seconds=compute_seconds)
+    t_counts = choose_algorithm(axis_dims, axis_links, p * 4.0,
+                                max_chunks=1).predicted_seconds
+    return Schedule(sched.kind, sched.dims, sched.links,
+                    sched.predicted_seconds + t_counts,
+                    n_chunks=sched.n_chunks)
+
+
 def choose_chunks(dims, links, block_bytes: float, *, max_chunks: int = 8,
                   compute_seconds: float = 0.0) -> int:
     """Chunk count minimizing ``predict_overlapped`` (1 = don't pipeline).

@@ -259,9 +259,22 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         # chunk count / round order was chosen per collective —
         # describe() includes tuned_from ("measured" when a tuning-DB
         # record drove the choice, "model" for the analytic default) and
-        # the measured candidate table for DB-hit plans.
-        "a2a_plans": [pl.describe() for pl in plan_cache_entries()
-                      if id(pl) not in plans_before],
+        # the measured candidate table for DB-hit plans.  Ragged plans
+        # (dropless MoE, --set capacity_factor=none) appear here too with
+        # kind="ragged".
+        "a2a_plans": (new_plans := [pl.describe()
+                                    for pl in plan_cache_entries()
+                                    if id(pl) not in plans_before]),
+        # Per-cell bucket-occupancy stats for the ragged plans: the
+        # expected useful fraction of each bucketed exchange's traffic
+        # (avg_count / bucket) — the padding price dropless mode pays, the
+        # quantity tuning.predict_ragged charges.
+        "a2a_ragged_occupancy": [
+            {"axis_names": d["axis_names"], "bucket": d["bucket"],
+             "max_count": d["max_count"], "avg_count": d["avg_count"],
+             "expected_occupancy": d["expected_occupancy"],
+             "backend": d["backend"], "tuned_from": d["tuned_from"]}
+            for d in new_plans if d.get("kind") == "ragged"],
         "a2a_plan_cache": plan_cache_stats(),
         # Tuning-DB traffic for the cell (delta over the cell, like the
         # a2a_plans snapshot above): under a2a_backend="autotune"

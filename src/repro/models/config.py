@@ -27,7 +27,13 @@ class ModelConfig:
     # --- MoE ---
     n_experts: int = 0
     top_k: int = 2
-    capacity_factor: float = 1.25
+    # Expert capacity factor (GShard-style), or None for *dropless* MoE:
+    # dispatch/combine route through the ragged Alltoallv plan
+    # (core.plan.plan_ragged_all_to_all) with the per-expert buffer sized
+    # to the worst case, so no token is ever dropped and the padding
+    # waste is reported as the plan's bucket occupancy instead of being
+    # silently shipped as capacity slack.
+    capacity_factor: float | None = 1.25
     router_aux_weight: float = 0.01
     moe_every: int = 1                # MoE FFN every k-th layer (jamba: 2)
 
@@ -106,6 +112,11 @@ class ModelConfig:
         if self.a2a_backend not in BACKENDS:
             raise ValueError(f"unknown a2a_backend {self.a2a_backend!r}; "
                              f"expected one of {BACKENDS}")
+
+    @property
+    def dropless(self) -> bool:
+        """Dropless MoE: no capacity factor, ragged dispatch/combine."""
+        return self.capacity_factor is None
 
     @property
     def hd(self) -> int:

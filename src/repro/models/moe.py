@@ -16,6 +16,11 @@ Dispatch layout (capacity-based, GShard-style):
   the paper's hierarchical decomposition.
 * Expert FFN runs as a grouped matmul (``kernels.expert_matmul``) with the
   hidden dim tensor-parallel over "model" (one psum per layer).
+* ``capacity_factor=None`` switches to **dropless** dispatch: the
+  collective becomes the ragged Alltoallv (``core.plan
+  .plan_ragged_all_to_all``) with the per-rank window sized to the worst
+  case, per-rank send counts from the router, and padding waste reported
+  as the plan's bucket occupancy — no token is ever dropped.
 """
 
 from __future__ import annotations
@@ -28,7 +33,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
-from repro.core.plan import plan_all_to_all
+from repro.core.plan import plan_all_to_all, plan_ragged_all_to_all
 from repro.kernels import ops as kops
 from repro.models.common import ParamSpec, silu, gelu
 from repro.parallel.sharding import ShardingRules, constrain, ep_axes, \
@@ -73,8 +78,14 @@ def _virtual_weights(w, G: int):
 
 
 def _capacity(cfg: ModelConfig, n_tokens: int, n_slots: int) -> int:
+    # A single expert can receive at most n_tokens rows from one device
+    # (the top_k experts of a token are distinct), so the capacity is
+    # clamped there: tiny batches must not pad past the routed tokens.
+    hard = max(1, n_tokens)
+    if cfg.capacity_factor is None:    # dropless: worst case, no slack
+        return hard
     c = math.ceil(cfg.capacity_factor * cfg.top_k * n_tokens / n_slots)
-    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+    return min(max(8, -(-c // 8) * 8), hard)  # 8-aligned, then clamped
 
 
 def moe_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int):
@@ -97,12 +108,39 @@ def moe_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int):
         n_chunks=cfg.a2a_chunks, max_chunks=cfg.a2a_chunks or 4)
 
 
+def moe_ragged_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int,
+                        n_loc: int):
+    """The RaggedA2APlan for dropless dispatch/combine
+    (``capacity_factor=None``).
+
+    One ragged row is one token embedding; each destination rank's bucket
+    window holds its ``(E_loc, C)`` expert-strided slots, so ``max_count``
+    is the per-rank window ``E_loc * C`` while the *expected* per-rank
+    payload is ``top_k * n_loc / p`` rows — the ratio is the plan's
+    occupancy estimate, the quantity dropless mode trades for never
+    dropping a token.  Same registry/caching semantics as
+    :func:`moe_a2a_plan`; ``cfg.a2a_backend`` resolves the padded data
+    plan identically.
+    """
+    if not axes or mesh is None:
+        return None
+    window = E_loc * C
+    p = math.prod(mesh.shape[a] for a in axes)
+    avg = min(float(window), max(1.0, cfg.top_k * n_loc / p))
+    return plan_ragged_all_to_all(
+        mesh, axes, row_shape=(cfg.d_model,), dtype=cfg.cdtype,
+        max_count=window, avg_count=avg, backend=cfg.a2a_backend,
+        variant=cfg.a2a_variant, n_chunks=cfg.a2a_chunks,
+        max_chunks=cfg.a2a_chunks or 4)
+
+
 def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
-               R, C, tp_axis, reduce_axes, plan=None):
+               R, C, tp_axis, reduce_axes, plan=None, ragged_plan=None):
     """Per-device MoE computation (runs inside shard_map, or standalone when
     there is no mesh).  x: (B_loc, S, D); w*: (1, E_loc, ...) local slices
     of the virtual-expert arrays; ``plan`` is the resolved A2APlan (None
-    when there is no EP group)."""
+    when there is no EP group); ``ragged_plan`` the RaggedA2APlan dropless
+    mode routes through instead (``capacity_factor=None``)."""
     B, S, D = x.shape
     N = B * S
     E = cfg.n_experts
@@ -167,7 +205,30 @@ def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
         out = plan.reverse(flat) if reverse else plan.forward(flat)
         return out.reshape(blocks.shape)
 
-    if plan is not None and plan.backend == "overlap":
+    if ragged_plan is not None:
+        # Dropless (capacity_factor=None): the ragged Alltoallv moves the
+        # (E_loc, C) expert-strided window of each destination rank as one
+        # bucket of token rows; per-rank send counts (the real routed
+        # assignments) drive the counts phase and the occupancy stat, and
+        # the combine direction reuses the dispatch's recv counts.  C is
+        # the worst case, so `keep` is identically true — no token drops.
+        # Combine re-derives slot validity from this device's own routing
+        # indices, so recv_counts feeds nothing the output depends on and
+        # XLA dead-code-eliminates both counts exchanges here — the
+        # counts phase costs nothing in this path; it exists for callers
+        # that do consume recv counts (see RaggedA2APlan.forward).
+        counts = jnp.zeros((G,), jnp.int32).at[v_idx].add(
+            keep.astype(jnp.int32), mode="drop")
+        rows = disp.reshape(G, E_loc * C, D)
+        recv_rows, recv_counts = ragged_plan.forward(rows, counts)
+        recv = recv_rows[:, :E_loc * C].reshape(G, E_loc, C, D)
+        recv = checkpoint_name(recv, "moe_recv")
+        ye = expert_ffn(recv)
+        back_rows, _ = ragged_plan.reverse(
+            ye.reshape(G, E_loc * C, D), recv_counts)
+        back = back_rows[:, :E_loc * C].reshape(G, E_loc, C, D)
+        back = checkpoint_name(back, "moe_back")
+    elif plan is not None and plan.backend == "overlap":
         # dispatch-round / expert-FFN / combine-round pipelined per
         # capacity chunk: chunk c+1's rounds hide behind chunk c's FFN.
         # Each chunk's post-dispatch state keeps the "moe_recv" name so the
@@ -240,10 +301,17 @@ def moe_block(p, x, cfg: ModelConfig, mesh=None,
                            mesh, rules)
     router_spec = P(None, None)
 
+    # Dropless mode replaces the capacity-padded dense collective with the
+    # ragged plan; otherwise the dense A2APlan path is unchanged.
+    if cfg.dropless:
+        plan, ragged = None, moe_ragged_a2a_plan(cfg, mesh, axes, E_loc, C,
+                                                 n_loc)
+    else:
+        plan, ragged = moe_a2a_plan(cfg, mesh, axes, E_loc, C), None
     inner = functools.partial(
         _moe_inner, cfg=cfg, axes=axes, G=G, E_loc=E_loc, R=R, C=C,
-        tp_axis=tp_axis, reduce_axes=reduce_axes,
-        plan=moe_a2a_plan(cfg, mesh, axes, E_loc, C))
+        tp_axis=tp_axis, reduce_axes=reduce_axes, plan=plan,
+        ragged_plan=ragged)
 
     y, aux = jax.shard_map(
         inner, mesh=mesh,

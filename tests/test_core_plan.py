@@ -134,6 +134,7 @@ class TestDescribeGolden:
         pred = d.pop("predicted_seconds")
         assert pred > 0
         assert d == {
+            "kind": "dense",
             "axis_names": ["i", "j"],
             "dims": [4, 2],
             "p": 8,
@@ -166,6 +167,113 @@ class TestDescribeGolden:
                             backend="factorized").describe()
         assert d["block_shape"] is None and d["dtype"] is None
         assert d["block_bytes"] is None and d["predicted_seconds"] is None
+
+
+class TestRaggedPlan:
+    """Device-free resolution/registry tests for RaggedA2APlan; bucketed
+    execution vs the oracle runs in check_ragged.py (12 devices)."""
+
+    def test_describe_golden(self):
+        from repro.core.plan import plan_ragged_all_to_all
+
+        p = plan_ragged_all_to_all((4, 2), ("i", "j"), (16,), "bfloat16",
+                                   max_count=12, avg_count=6.0,
+                                   backend="factorized", variant="paper",
+                                   round_order=(1, 0), links=(ICI, DCN))
+        d = p.describe()
+        pred = d.pop("predicted_seconds")
+        assert pred > 0
+        assert d == {
+            "kind": "ragged",
+            "axis_names": ["i", "j"],
+            "dims": [4, 2],
+            "p": 8,
+            "d": 2,
+            "backend": "factorized",
+            "requested_backend": "factorized",
+            "variant": "paper",
+            "round_order": [1, 0],
+            "reverse_round_order": [0, 1],
+            "n_chunks": 1,
+            "row_shape": [16],
+            "dtype": "bfloat16",
+            "row_bytes": 32,
+            "max_count": 12,
+            "avg_count": 6.0,
+            "bucket": 16,                       # next pow2 of 12
+            "bucket_block_bytes": 16 * 32,
+            "expected_occupancy": 6.0 / 16,
+            "counts_backend": "factorized",     # tiny int32 block: tuned
+            "counts_block_bytes": 8 * 4,        # one full count row
+            "blocks_sent_per_device": 2 * 8 - (2 + 4),
+            "links": [{"alpha": ICI.alpha, "bandwidth": ICI.bandwidth},
+                      {"alpha": DCN.alpha, "bandwidth": DCN.bandwidth}],
+            "tuned_from": None,
+            "measured": None,
+            "cache": "miss",
+        }
+        import json
+        json.dumps(p.describe())
+
+    def test_registry_identity_and_sharing(self):
+        from repro.core.plan import plan_ragged_all_to_all
+
+        a = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=5)
+        b = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=5)
+        assert a is b and b.describe()["cache"] == "hit"
+        # distinct max_count -> distinct bucket -> distinct plan
+        c = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=9)
+        assert c is not a and c.bucket == 16
+        # the underlying dense data/counts plans live in the same registry
+        # (two ragged plans over the same torus share the counts plan)
+        assert a.counts_plan is c.counts_plan
+
+    def test_validation(self):
+        from repro.core.plan import plan_ragged_all_to_all
+
+        with pytest.raises(ValueError, match="bucket bound"):
+            plan_ragged_all_to_all((2, 2), ("i", "j"), (4,), "float32",
+                                   max_count=0)
+        with pytest.raises(ValueError, match="avg_count"):
+            plan_ragged_all_to_all((2, 2), ("i", "j"), (4,), "float32",
+                                   max_count=4, avg_count=9.0)
+        with pytest.raises(ValueError, match="backend"):
+            plan_ragged_all_to_all((2, 2), ("i", "j"), (4,), "float32",
+                                   max_count=4, backend="quantum")
+
+    def test_predicted_includes_counts_phase(self):
+        from repro.core.plan import plan_ragged_all_to_all
+        from repro.core.tuning import predict_ragged
+
+        dims, links = (4, 2), (ICI, DCN)
+        p = plan_ragged_all_to_all(dims, ("i", "j"), (16,), "float32",
+                                   max_count=8, backend="factorized",
+                                   links=links)
+        want = predict_ragged(dims, links, 16 * 4, p.bucket, p.p)
+        assert p.predicted_seconds == pytest.approx(want)
+
+    def test_tuned_matches_choose_ragged_algorithm(self):
+        from repro.core.plan import plan_ragged_all_to_all
+        from repro.core.tuning import choose_ragged_algorithm
+
+        dims, links = (16, 4), (ICI, DCN)
+        for row_bytes, max_count in ((4, 2), (1 << 12, 64)):
+            sched = choose_ragged_algorithm(
+                dims, links, float(row_bytes),
+                plan_ragged_all_to_all(dims, ("i", "j"), (row_bytes,),
+                                       "int8", max_count=max_count,
+                                       links=links).bucket,
+                max_chunks=8)
+            plan = plan_ragged_all_to_all(dims, ("i", "j"), (row_bytes,),
+                                          "int8", max_count=max_count,
+                                          backend="tuned", max_chunks=8,
+                                          links=links)
+            assert plan.backend == sched.kind
+            assert plan.predicted_seconds == \
+                pytest.approx(sched.predicted_seconds)
 
 
 class TestPlanRegistry:

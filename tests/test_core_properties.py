@@ -78,3 +78,77 @@ class TestPlanProperties:
         again = plan_all_to_all(dims, names, (block,), "float32",
                                 backend=backend)
         assert again is plan and again.describe()["cache"] == "hit"
+
+
+class TestRaggedProperties:
+    """The ragged (Alltoallv) subsystem: oracle correctness over random
+    factorizations x random count matrices, the uniform-counts
+    degeneration to the dense algorithm, and resolution invariants of the
+    RaggedA2APlan registry.  Multi-device bit-exactness of the bucketed
+    executor against the dense A2APlan runs in
+    ``tests/device_scripts/check_ragged.py``."""
+
+    @given(st.lists(st.integers(2, 4), min_size=1, max_size=3),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_random_counts_match_brute_force(self, dims, seed):
+        from repro.core.simulator import (check_correct_alltoallv)
+        dims = tuple(dims)
+        if math.prod(dims) > 36:
+            dims = dims[:2]
+        p = math.prod(dims)
+        state = seed
+        counts = []
+        for _ in range(p):
+            row = []
+            for _ in range(p):
+                state = (state * 6364136223846793005 + 1442695040888963407) \
+                    % (1 << 63)
+                row.append(state % 5)
+            counts.append(row)
+        assert check_correct_alltoallv(dims, counts)
+
+    @given(st.lists(st.integers(2, 4), min_size=1, max_size=3),
+           st.integers(1, 4))
+    @settings(max_examples=15, deadline=None)
+    def test_uniform_counts_equal_dense_simulator(self, dims, c):
+        from repro.core.simulator import (simulate_factorized_alltoall,
+                                          simulate_factorized_alltoallv)
+        dims = tuple(dims)
+        if math.prod(dims) > 36:
+            dims = dims[:2]
+        p = math.prod(dims)
+        ragged, _ = simulate_factorized_alltoallv(dims, [[c] * p] * p)
+        dense, _ = simulate_factorized_alltoall(dims)
+        for r in range(p):
+            assert [slot[0][:2] for slot in ragged[r]] == dense[r]
+
+    @given(st.lists(st.integers(1, 6), min_size=1, max_size=3),
+           st.sampled_from(["direct", "factorized", "overlap", "tuned"]),
+           st.integers(1, 100), st.integers(1, 8))
+    @settings(max_examples=40, deadline=None)
+    def test_ragged_plan_resolution_invariants(self, dims, backend,
+                                               max_count, row):
+        from repro.core.plan import free_plans, plan_ragged_all_to_all
+        from repro.core.ragged import next_pow2
+
+        dims = tuple(dims)
+        names = tuple(f"a{i}" for i in range(len(dims)))
+        free_plans()
+        plan = plan_ragged_all_to_all(dims, names, (row,), "float32",
+                                      max_count=max_count, backend=backend)
+        assert plan.p == math.prod(dims)
+        assert plan.bucket == next_pow2(max_count)
+        assert plan.bucket >= max_count and plan.bucket < 2 * max_count + 1
+        assert 0.0 < plan.expected_occupancy <= 1.0
+        d = plan.describe()
+        assert d["kind"] == "ragged"
+        assert d["bucket_block_bytes"] == plan.bucket * row * 4
+        assert d["counts_block_bytes"] == plan.p * 4
+        # data phase priced at the padded size: same backend family as the
+        # dense plan over (bucket, row) blocks
+        assert plan.backend in ("direct", "factorized", "pipelined",
+                                "overlap")
+        again = plan_ragged_all_to_all(dims, names, (row,), "float32",
+                                       max_count=max_count, backend=backend)
+        assert again is plan and again.describe()["cache"] == "hit"

@@ -146,6 +146,56 @@ class TestMoE:
         y, _ = moe_block(p, x, cfg, mesh=None)
         assert y.shape == x.shape and bool(jnp.isfinite(y).all())
 
+    def test_capacity_clamped_to_routed_tokens(self):
+        # the boundary: a tiny batch must never pad the capacity past the
+        # routed-token count, whatever the capacity factor says
+        from repro.models.moe import _capacity
+        cfg = _cfg("moe", n_experts=4, top_k=1, capacity_factor=8.0)
+        assert _capacity(cfg, 2, 4) == 2          # was 8 (8-aligned floor)
+        assert _capacity(cfg, 1, 4) == 1
+        cfg2 = _cfg("moe", n_experts=4, top_k=2, capacity_factor=8.0)
+        # per-expert worst case is n_tokens (top_k experts are distinct)
+        assert _capacity(cfg2, 3, 4) == 3
+        assert _capacity(cfg2, 100, 4) == 100     # clamp binds: 8.0*2*100/4
+        cfg3 = _cfg("moe", n_experts=4, top_k=2, capacity_factor=0.25)
+        assert _capacity(cfg3, 100, 4) == 16      # unclamped regime: 8-align
+
+    def test_dropless_capacity_is_worst_case(self):
+        from repro.models.moe import _capacity
+        cfg = _cfg("moe", n_experts=4, top_k=2, capacity_factor=None)
+        assert cfg.dropless
+        assert _capacity(cfg, 16, 4) == 16
+        assert _capacity(cfg, 2, 4) == 2
+
+    def test_dropless_equals_high_capacity_locally(self):
+        # capacity_factor=None (dropless) must reproduce the capacity path
+        # whenever the capacity path would not have dropped
+        cfg_cap = _cfg("moe", n_experts=4, capacity_factor=8.0)
+        cfg_drop = _cfg("moe", n_experts=4, capacity_factor=None)
+        p = init_params(moe_specs(cfg_cap), KEY, jnp.float32)
+        x = jax.random.normal(KEY, (2, 16, 32))
+        y_cap, aux_cap = moe_block(p, x, cfg_cap, mesh=None)
+        y_drop, aux_drop = moe_block(p, x, cfg_drop, mesh=None)
+        np.testing.assert_allclose(np.array(y_cap), np.array(y_drop),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(float(aux_cap), float(aux_drop),
+                                   rtol=1e-6)
+
+    def test_dropless_keeps_tokens_the_capacity_path_drops(self):
+        # skew the router so one expert overflows a tight capacity: the
+        # capacity path drops (some gate mass lost), dropless must not
+        cfg_tight = _cfg("moe", n_experts=4, top_k=1, capacity_factor=0.3)
+        cfg_drop = _cfg("moe", n_experts=4, top_k=1, capacity_factor=None)
+        p = init_params(moe_specs(cfg_tight), KEY, jnp.float32)
+        p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+        x = jax.random.normal(KEY, (2, 32, 32))
+        y_tight, _ = moe_block(p, x, cfg_tight, mesh=None)
+        y_drop, _ = moe_block(p, x, cfg_drop, mesh=None)
+        # dropped tokens contribute zero output rows in the tight path
+        zero_rows_tight = int(jnp.sum(jnp.all(y_tight == 0, axis=-1)))
+        zero_rows_drop = int(jnp.sum(jnp.all(y_drop == 0, axis=-1)))
+        assert zero_rows_tight > 0 and zero_rows_drop == 0
+
 
 class TestRematPolicies:
     @pytest.mark.parametrize("policy", ["nothing", "dots", "collectives"])

@@ -46,6 +46,20 @@ def test_autotune_measured_selection_12dev():
 
 
 @pytest.mark.slow
+def test_ragged_alltoallv_12dev():
+    # Ragged subsystem acceptance: bucketed and exact modes match the
+    # simulator Alltoallv oracle bit-exactly, uniform-counts bucketed
+    # execution is bit-exact with the dense A2APlan, and dropless MoE
+    # (capacity_factor=None) equals the capacity-padded path whenever no
+    # token would have been dropped.
+    out = run_device_script("check_ragged.py", devices=12)
+    assert "OK bucketed ragged == simulator oracle" in out
+    assert "OK exact two-phase == simulator oracle" in out
+    assert "OK uniform ragged == dense A2APlan bit-exact" in out
+    assert out.count("OK dropless MoE == capacity MoE") == 4
+
+
+@pytest.mark.slow
 def test_overlap_engine_parity():
     out = run_device_script("check_overlap.py", devices=8)
     assert "OK overlap==factorized==direct" in out
