@@ -1,5 +1,6 @@
 """Paper §5 (Figures 1–3): factorized vs direct all-to-all over message
-sizes, executed through the ``A2APlan`` API.
+sizes, constructed through the ``TorusComm`` API root (``core.comm``)
+and executed through the plan objects it returns.
 
 Protocol mirrors the paper: element counts in deciles 1..10000 of int32
 ("MPI_INT") per process pair, 8 warmup + 40 measured repetitions,
@@ -15,16 +16,22 @@ multi-ported hardware (see tuning.predict_overlapped).
 Each row additionally measures the paper's *cached-communicator
 amortization* on our stack (Listings 1–2: setup once, reuse forever):
 
-* ``plan_cold_us``   — ``plan_all_to_all`` with an empty registry: the
-  full once-per-plan resolution (factorization, cost model, schedule).
-* ``plan_cached_us`` — the same call hitting the LRU plan registry, i.e.
-  the per-call cost every steady-state all-to-all actually pays.
+* ``plan_cold_us``   — ``torus_comm(...).all_to_all(...)`` with empty
+  registries: the full once-per-plan resolution (communicator build,
+  factorization, cost model, schedule).
+* ``plan_cached_us`` — the same call hitting the comm + plan LRU
+  registries, i.e. the per-call cost every steady-state all-to-all pays.
 
 The ``ragged[d=2]`` column measures the bucketed Alltoallv subsystem
 (core.ragged): ``block_elems`` is the per-pair ``max_count`` of int32
 rows, counts are a fixed non-uniform matrix, and the recorded ``seconds``
 covers the counts phase plus the bucket-padded data rounds — with the
 achieved ``occupancy`` (useful rows / bucketed rows) alongside.
+
+The ``allgather[d=2]`` column measures the dimension-wise gather family
+(``comm.all_gather``): ``block_elems`` int32 elements contributed per
+rank, exchanged as d per-axis stages on the same cached communicator —
+plus the usual plan cold/cached construction columns.
 
 The ``autotune[d=2]`` column prices the measured-selection pipeline
 (core.autotune) against an isolated throwaway tuning DB:
@@ -59,8 +66,8 @@ import numpy as np
 from repro.core import dims_create
 from repro.core.autotune import TuningDB, autotune
 from repro.core.cache import cart_create, free_all
-from repro.core.plan import free_plans, plan_all_to_all, plan_cache_stats, \
-    plan_ragged_all_to_all
+from repro.core.comm import free_comms, torus_comm
+from repro.core.plan import free_plans, plan_cache_stats
 
 ELEMENTS = (1, 10, 100, 1000, 10000)
 WARMUP, REPS = 8, 40
@@ -80,26 +87,29 @@ def bench(fn, x):
     return best
 
 
-def bench_plan_construction(mesh, names, nelem, backend, **plan_kw):
-    """(cold_seconds, cached_seconds) for one plan resolution, best-of
-    (same protocol as the collective timings).  Cold clears *both*
-    registries (plans and factorization descriptors + fingerprint memo)
-    so it prices the full once-per-plan setup — for backend="autotune"
-    that is the warm-DB reconstruction path, never a measurement."""
+def bench_plan_construction(mesh, names, nelem, backend, method="all_to_all",
+                            **plan_kw):
+    """(cold_seconds, cached_seconds) for one plan resolution through the
+    communicator, best-of (same protocol as the collective timings).
+    Cold clears *all three* registries (comms, plans, and factorization
+    descriptors + fingerprint memo) so it prices the full once-per-plan
+    setup including the implicit-comm build — for backend="autotune" that
+    is the warm-DB reconstruction path, never a measurement."""
     kw = dict(block_shape=(nelem,), dtype=jnp.int32, backend=backend,
               **plan_kw)
     cold = float("inf")
     for _ in range(8):
+        free_comms()
         free_plans()
         free_all()
         t0 = time.perf_counter()
-        plan_all_to_all(mesh, names, **kw)
+        getattr(torus_comm(mesh, names), method)(**kw)
         cold = min(cold, time.perf_counter() - t0)
     cached = float("inf")
     for _ in range(8):
         t0 = time.perf_counter()
         for _ in range(PLAN_REPS):
-            plan_all_to_all(mesh, names, **kw)
+            getattr(torus_comm(mesh, names), method)(**kw)
         cached = min(cached, (time.perf_counter() - t0) / PLAN_REPS)
     return cold, cached
 
@@ -117,10 +127,10 @@ def bench_ragged(p_procs, rows):
     dims = dims_create(p_procs, 2)
     names = tuple(f"t{i}" for i in range(len(dims)))
     mesh = cart_create(p_procs, tuple(reversed(dims)), names)
+    comm = torus_comm(mesh, names)
     rng = np.random.default_rng(0)
     for nelem in ELEMENTS:
-        plan = plan_ragged_all_to_all(mesh, names, (), jnp.int32,
-                                      max_count=nelem)
+        plan = comm.ragged_all_to_all((), jnp.int32, max_count=nelem)
         counts = jnp.asarray(rng.integers(0, nelem + 1,
                                           size=(p_procs, p_procs)),
                              jnp.int32)
@@ -143,23 +153,51 @@ def bench_ragged(p_procs, rows):
 
 def bench_ragged_plan_construction(mesh, names, max_count):
     """Ragged analogue of ``bench_plan_construction``: cold resolves the
-    data + counts plans and the bucket; cached is the LRU fetch of the
-    composed RaggedA2APlan."""
+    comm, the data + counts plans and the bucket; cached is the LRU fetch
+    of the composed RaggedA2APlan."""
     kw = dict(row_shape=(), dtype=jnp.int32, max_count=max_count)
     cold = float("inf")
     for _ in range(8):
+        free_comms()
         free_plans()
         free_all()
         t0 = time.perf_counter()
-        plan_ragged_all_to_all(mesh, names, **kw)
+        torus_comm(mesh, names).ragged_all_to_all(**kw)
         cold = min(cold, time.perf_counter() - t0)
     cached = float("inf")
     for _ in range(8):
         t0 = time.perf_counter()
         for _ in range(PLAN_REPS):
-            plan_ragged_all_to_all(mesh, names, **kw)
+            torus_comm(mesh, names).ragged_all_to_all(**kw)
         cached = min(cached, (time.perf_counter() - t0) / PLAN_REPS)
     return cold, cached
+
+
+def bench_allgather(p_procs, rows):
+    """The dimension-wise gather-family column: ``comm.all_gather`` on
+    the d=2 factorization.  ``block_elems`` int32 elements are
+    contributed per rank; ``seconds`` covers the d per-axis stages
+    (``backend="factorized"``); plan cold/cached columns price the
+    comm-rooted construction exactly like the all-to-all rows."""
+    dims = dims_create(p_procs, 2)
+    names = tuple(f"t{i}" for i in range(len(dims)))
+    mesh = cart_create(p_procs, tuple(reversed(dims)), names)
+    comm = torus_comm(mesh, names)
+    for nelem in ELEMENTS:
+        plan = comm.all_gather((nelem,), jnp.int32, backend="factorized")
+        x = jnp.ones((p_procs, nelem), jnp.int32)
+        sec = bench(plan.host_fn(), x)
+        cold, cached = bench_plan_construction(mesh, names, nelem,
+                                               "factorized",
+                                               method="all_gather")
+        rows.append({"impl": "allgather[d=2]", "dims": list(dims),
+                     "block_elems": nelem, "seconds": sec,
+                     "plan_cold_us": cold * 1e6,
+                     "plan_cached_us": cached * 1e6,
+                     "plan": plan.describe()})
+        print(f"alltoall_cmp,allgather[d=2],{nelem},{sec * 1e6:.1f},"
+              f"plan_cold={cold * 1e6:.1f}us,"
+              f"plan_cached={cached * 1e6:.2f}us")
 
 
 def bench_autotune(p_procs, rows):
@@ -167,7 +205,7 @@ def bench_autotune(p_procs, rows):
 
     Uses a throwaway ``TuningDB`` in a temp directory (never the user's
     ``~/.cache/repro/tuning.json``), passed explicitly through
-    ``plan_all_to_all(db=...)``."""
+    ``comm.all_to_all(db=...)``."""
     dims = dims_create(p_procs, 2)
     names = tuple(f"t{i}" for i in range(len(dims)))
     mesh = cart_create(p_procs, tuple(reversed(dims)), names)
@@ -223,8 +261,9 @@ def main(argv=None):
     for impl, dims, backend in variants:
         names = tuple(f"t{i}" for i in range(len(dims)))
         mesh = cart_create(p_procs, tuple(reversed(dims)), names)
+        comm = torus_comm(mesh, names)
         for nelem in ELEMENTS:
-            plan = plan_all_to_all(mesh, names, block_shape=(nelem,),
+            plan = comm.all_to_all(block_shape=(nelem,),
                                    dtype=jnp.int32, backend=backend)
             fn = plan.host_fn()
             x = jnp.ones((p_procs, p_procs, nelem), jnp.int32)
@@ -240,6 +279,7 @@ def main(argv=None):
                   f"plan_cold={cold * 1e6:.1f}us,"
                   f"plan_cached={cached * 1e6:.2f}us")
 
+    bench_allgather(p_procs, rows)
     bench_ragged(p_procs, rows)
     bench_autotune(p_procs, rows)
 

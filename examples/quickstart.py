@@ -18,7 +18,7 @@ import numpy as np                                              # noqa: E402
 
 from repro.core import (ICI, DCN, cart_create, choose_algorithm,   # noqa: E402
                         dims_create, example_index_table,
-                        get_factorization, host_alltoall)
+                        get_factorization, torus_comm)
 
 # 1. MPI_Dims_create analogue: balanced factorizations (paper Table 1)
 p = 12
@@ -39,12 +39,23 @@ print(f"\ncached factorization: dims={desc.dims} sigma={desc.sigma} "
       f"blocks/device (Thm 1) = {desc.blocks_sent_per_device()} "
       f"vs direct {desc.p - 1}")
 
-# 4. The collective itself (Listing 3, zero-copy):
+# 4. The collective itself (Listing 3, zero-copy), through the
+#    communicator — the API root every collective hangs off:
+comm = torus_comm(mesh, ("x", "y", "z"))
 x = jnp.arange(12 * 12 * 4, dtype=jnp.float32).reshape(12, 12, 4)
-fact = host_alltoall(mesh, ("x", "y", "z"), backend="factorized")
-direct = host_alltoall(mesh, ("x", "y", "z"), backend="direct")
+fact = comm.all_to_all((4,), jnp.float32, backend="factorized").host_fn()
+direct = comm.all_to_all((4,), jnp.float32, backend="direct").host_fn()
 np.testing.assert_array_equal(np.asarray(fact(x)), np.asarray(direct(x)))
 print("factorized(d=3) == direct all-to-all ✓  (12 devices)")
+
+# 4b. The dimension-wise family on the same communicator: a sub-comm
+#     over two of the axes, and the d-stage all-gather
+sub = comm.sub(("x", "y"))
+g = jnp.arange(12 * 3, dtype=jnp.int32).reshape(12, 3)
+gathered = comm.all_gather((3,), jnp.int32, backend="factorized").host_fn()
+np.testing.assert_array_equal(np.asarray(gathered(g))[0], np.asarray(g))
+print(f"sub-comm over {sub.axis_names} dims={sub.dims}; "
+      f"d-stage all_gather ✓")
 
 # 5. Tuning: the paper's small-block/large-block crossover
 for nbytes in (4, 400, 4_000_000):

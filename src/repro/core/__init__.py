@@ -32,6 +32,14 @@ from .plan import (
     plan_ragged_all_to_all,
     set_plan_cache_capacity,
 )
+from .comm import (
+    AllGatherPlan,
+    ReduceScatterPlan,
+    TorusComm,
+    free_comms,
+    torus_comm,
+    unified_stats,
+)
 from .ragged import (
     bucket_occupancy,
     exact_alltoallv,
@@ -52,8 +60,10 @@ from .simulator import (
     round_datatype,
     simulate_direct_alltoall,
     simulate_direct_alltoallv,
+    simulate_factorized_allgather,
     simulate_factorized_alltoall,
     simulate_factorized_alltoallv,
+    simulate_factorized_reduce_scatter,
 )
 from .tuning import (
     DCN,
@@ -62,10 +72,13 @@ from .tuning import (
     Schedule,
     choose_algorithm,
     choose_chunks,
+    choose_dimwise_algorithm,
     choose_ragged_algorithm,
     crossover_block_bytes,
+    predict_allgather,
     predict_overlapped,
     predict_ragged,
+    predict_reduce_scatter,
 )
 from .guidelines import Measurement, Violation, check_guidelines, format_report
 from .hlo_inspect import collective_bytes_of, interleave_report, parse_hlo
@@ -78,24 +91,28 @@ from .overlap import (
 )
 
 __all__ = [
-    "A2APlan", "DCN", "ICI", "LinkModel", "Measurement", "PAPER_EXAMPLES",
-    "RaggedA2APlan", "Schedule", "TorusFactorization", "TuningDB",
+    "A2APlan", "AllGatherPlan", "DCN", "ICI", "LinkModel", "Measurement",
+    "PAPER_EXAMPLES", "RaggedA2APlan", "ReduceScatterPlan", "Schedule",
+    "TorusComm", "TorusFactorization", "TuningDB",
     "Violation", "autotune", "autotune_stats", "bucket_occupancy",
     "cache_stats", "cart_create", "check_guidelines", "choose_algorithm",
-    "choose_chunks", "choose_ragged_algorithm", "collective_bytes_of",
+    "choose_chunks", "choose_dimwise_algorithm", "choose_ragged_algorithm",
+    "collective_bytes_of",
     "crossover_block_bytes", "default_db_path", "dims_create",
     "direct_all_to_all", "direct_all_to_all_tiled", "exact_alltoallv",
     "example_index_table", "factorized_all_to_all",
     "factorized_all_to_all_tiled", "format_report", "free", "free_all",
-    "free_plans", "get_factorization", "host_alltoall",
+    "free_comms", "free_plans", "get_factorization", "host_alltoall",
     "interleave_report", "max_dims", "next_pow2", "overlapped_all_to_all",
     "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
     "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",
     "plan_cache_stats", "plan_db_key", "plan_ragged_all_to_all",
-    "predict_overlapped", "predict_ragged", "prime_factorization",
+    "predict_allgather", "predict_overlapped", "predict_ragged",
+    "predict_reduce_scatter", "prime_factorization",
     "reset_autotune_stats", "round_datatype", "run_pipelined",
     "set_cache_capacity", "set_plan_cache_capacity",
     "simulate_direct_alltoall", "simulate_direct_alltoallv",
-    "simulate_factorized_alltoall", "simulate_factorized_alltoallv",
-    "torus_rank",
+    "simulate_factorized_allgather", "simulate_factorized_alltoall",
+    "simulate_factorized_alltoallv", "simulate_factorized_reduce_scatter",
+    "torus_comm", "torus_rank", "unified_stats",
 ]

@@ -454,7 +454,8 @@ def autotune(mesh: Mesh, axis_names, block_shape, dtype, *,
     candidates are recorded as skipped (never silently dropped) — the
     direct and factorized baselines are always measured.
     """
-    from .plan import plan_all_to_all, default_links
+    from .plan import plan_all_to_all
+    from .tuning import default_links
 
     axes = _as_tuple(axis_names)
     dims = tuple(int(mesh.shape[a]) for a in axes)

@@ -1,0 +1,767 @@
+"""TorusComm — the cached Cartesian communicator as the API root.
+
+The paper's load-bearing object is the *cached Cartesian communicator*:
+``MPI_Cart_create`` once, split into d dimension-wise sub-communicators
+once, cache both via attribute caching (Listings 1–2), and express every
+collective as d dimension-wise exchanges.  Earlier PRs built the
+collectives (dense, ragged, overlapped) but left the communicator
+implicit — factorizations in ``core.cache``, plans in ``core.plan``'s
+LRU, measurements in ``core.autotune``'s TuningDB, every call site
+re-supplying ``(mesh, axes)`` tuples.  :class:`TorusComm` makes it
+explicit:
+
+* ``torus_comm(mesh_or_dims, axes, *, d=None, variant=...)`` builds (or
+  fetches from a bounded LRU registry) the communicator: it owns the
+  torus factorization descriptor, the stable device fingerprint, its
+  slice of the plan registry, and the tuning-DB handle/generation.
+* ``comm.sub(axes)`` is the paper's dimension-wise split made user-visible
+  and recursive: a child communicator over an axis subset.  Sub-comm
+  plans share the global plan registry with their top-level equivalents,
+  so ``comm.sub(axes).all_to_all(...)`` *is* the identical cached plan a
+  top-level ``torus_comm(mesh, axes).all_to_all(...)`` returns
+  (bit-exactness by construction; property- and device-tested).
+* ``comm.all_to_all`` / ``comm.ragged_all_to_all`` are the single factory
+  for the existing plan family (``A2APlan`` / ``RaggedA2APlan``), and
+  ``comm.all_gather`` / ``comm.reduce_scatter`` extend it with a new
+  **dimension-wise gather family** (Mortensen et al.'s advanced-MPI
+  transposes, Träff et al.'s isomorphic collectives): d per-axis stages
+  through the same double-buffered round machinery (``core.overlap
+  .run_pipelined``), validated against the ``core.simulator`` oracles on
+  the paper's 5x4 and 2x3x4 tori.
+* lifecycle: ``comm.free()`` (or the context-manager form) is the
+  delete callback — it drops the comm's plans from the registry (nested
+  entries included) and releases its factorization refs; ``comm.stats()``
+  unifies what used to take three calls (``cache_stats`` +
+  ``plan_cache_stats`` + ``autotune_stats``) plus the tuning-DB
+  generation into one report.
+
+``plan_all_to_all`` / ``plan_ragged_all_to_all`` remain as thin
+delegators that build or reuse an *implicit* comm, so the PR 2
+deprecation story (legacy free functions -> plans) is preserved
+unchanged one level down.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import plan as _planmod
+from .cache import (
+    LRUCache,
+    TorusFactorization,
+    cache_stats,
+    cart_create,
+    device_fingerprint,
+    get_factorization,
+)
+from .factorized import _as_tuple, _axis_sizes, _skip_trivial
+from .overlap import _check_order, _split_chunks, run_pipelined
+from .tuning import (
+    choose_dimwise_algorithm,
+    predict_allgather,
+    predict_direct,
+    predict_reduce_scatter,
+    resolve_links,
+    slowest_active_link,
+)
+
+GATHER_BACKENDS = ("tuned", "direct", "factorized")
+
+
+# ---------------------------------------------------------------------------
+# Dimension-wise gather kernels (run inside jax.shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _allgather_stages(names, sizes, order):
+    """One tiled per-axis gather per round, on the d-dim block view
+    (axes ``[dim d-1, ..., dim 0, *payload]``; processed dims grow from
+    extent 1 to ``D[k]``, ordered by the peer's digit)."""
+    d = len(sizes)
+    pos = lambda m: d - 1 - m
+
+    def stage(k):
+        def run(view, _c):
+            return lax.all_gather(view, names[k], axis=pos(k), tiled=True)
+        return run
+    return [stage(k) for k in order]
+
+
+def _reduce_scatter_stages(names, sizes, order):
+    """The mirror: one tiled per-axis psum-scatter per round (processed
+    dims shrink from ``D[k]`` to extent 1; each member keeps the tile at
+    its own digit, summed over the group)."""
+    d = len(sizes)
+    pos = lambda m: d - 1 - m
+
+    def stage(k):
+        def run(view, _c):
+            return lax.psum_scatter(view, names[k],
+                                    scatter_dimension=pos(k), tiled=True)
+        return run
+    return [stage(k) for k in order]
+
+
+def _allgather_impl(x, axis_names, *, round_order=None, n_chunks: int = 1):
+    """d-stage dimension-wise all-gather (the ``core.simulator`` oracle's
+    JAX form).
+
+    Args:
+      x: this device's ``(*block)`` contribution.
+      axis_names: torus dimensions, fastest digit first.
+      round_order: permutation of the active rounds (stages commute).
+      n_chunks: payload chunks run through the software pipeline
+        (``run_pipelined``) so stages of different chunks interleave on
+        different dimension links, exactly like the overlap engine.
+
+    Returns ``(p, *block)``: ``out[i]`` = the block contributed by torus
+    rank ``i``.
+    """
+    axis_names = _as_tuple(axis_names)
+    dims = _axis_sizes(axis_names)
+    p = math.prod(dims)
+    names, sizes = _skip_trivial(axis_names, dims)
+    d = len(sizes)
+    if d == 0:
+        return x[None]
+    order = _check_order(round_order, d)
+    flat = x.reshape(-1)
+    chunks = _split_chunks(flat, 0, max(1, n_chunks))
+    stages = _allgather_stages(names, sizes, order)
+    views = [c.reshape((1,) * d + c.shape) for c in chunks]
+    outs = [v.reshape(p, -1) for v in run_pipelined(views, stages)]
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    return out.reshape((p,) + x.shape)
+
+
+def _direct_allgather_impl(x, axis_names):
+    """Baseline: one tiled gather over the product communicator."""
+    names, _ = _skip_trivial(_as_tuple(axis_names),
+                             _axis_sizes(_as_tuple(axis_names)))
+    if not names:
+        return x[None]
+    return lax.all_gather(x[None], tuple(reversed(names)), axis=0,
+                          tiled=True)
+
+
+def _reduce_scatter_impl(x, axis_names, *, round_order=None,
+                         n_chunks: int = 1):
+    """d-stage dimension-wise reduce-scatter.
+
+    Args:
+      x: ``(p, *block)`` — block ``i`` is this device's contribution to
+        torus rank ``i``'s reduction.
+      round_order / n_chunks: as in :func:`_allgather_impl`.
+
+    Returns ``(*block)``: the sum over all ranks ``r`` of rank ``r``'s
+    block destined here.  Summation order differs from the direct
+    single-collective form, so cross-backend bit-exactness holds for
+    exact dtypes (ints); floats agree to rounding.
+    """
+    axis_names = _as_tuple(axis_names)
+    dims = _axis_sizes(axis_names)
+    p = math.prod(dims)
+    if x.shape[0] != p:
+        raise ValueError(f"leading dim {x.shape[0]} != prod(dims)={p} "
+                         f"({dims})")
+    names, sizes = _skip_trivial(axis_names, dims)
+    d = len(sizes)
+    if d == 0:
+        return x[0]
+    order = _check_order(round_order, d)
+    flat = x.reshape(p, -1)
+    chunks = _split_chunks(flat, 1, max(1, n_chunks))
+    stages = _reduce_scatter_stages(names, sizes, order)
+    view_prefix = tuple(reversed(sizes))
+    views = [c.reshape(view_prefix + c.shape[1:]) for c in chunks]
+    outs = [v.reshape(-1) for v in run_pipelined(views, stages)]
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return out.reshape(x.shape[1:])
+
+
+def _direct_reduce_scatter_impl(x, axis_names):
+    """Baseline: one tiled psum-scatter over the product communicator."""
+    names, _ = _skip_trivial(_as_tuple(axis_names),
+                             _axis_sizes(_as_tuple(axis_names)))
+    if not names:
+        return x[0]
+    out = lax.psum_scatter(x, tuple(reversed(names)), scatter_dimension=0,
+                           tiled=True)
+    return out.reshape(x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# The gather-family plan objects
+# ---------------------------------------------------------------------------
+
+
+class _DimwisePlan:
+    """Shared plumbing of the gather-family plans (identity, describe,
+    host_fn caching); resolved and cached like every other plan."""
+
+    kind = "dimwise"
+
+    def __init__(self, fact: TorusFactorization, *, requested_backend: str,
+                 backend: str, order: tuple[int, ...], n_chunks: int,
+                 block_shape, dtype, links, predicted_seconds, mesh,
+                 tuned_from, parent):
+        self.fact = fact
+        self.requested_backend = requested_backend
+        self.backend = backend
+        self.order = order
+        self.n_chunks = n_chunks
+        self.block_shape = None if block_shape is None \
+            else tuple(block_shape)
+        self.dtype = dtype
+        self.links = links
+        self.predicted_seconds = predicted_seconds
+        self.tuned_from = tuned_from
+        # Axis names of the comm this plan's owner was split from (a
+        # sub-communicator lineage marker), or None for top-level comms.
+        self.parent = parent
+        self._mesh = mesh
+        self._from_cache = False
+        self._fetches = 1
+        self._host_fns: dict[Mesh, object] = {}
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self.fact.axis_names
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.fact.dims
+
+    @property
+    def p(self) -> int:
+        return self.fact.p
+
+    @property
+    def d(self) -> int:
+        return self.fact.d
+
+    @property
+    def variant(self) -> str:
+        return self.fact.variant
+
+    @property
+    def block_bytes(self) -> int | None:
+        if self.block_shape is None or self.dtype is None:
+            return None
+        return math.prod(self.block_shape) * jnp.dtype(self.dtype).itemsize
+
+    # -- introspection -----------------------------------------------------
+
+    def describe(self) -> dict:
+        """Stable, JSON-serializable summary of the resolved plan."""
+        return {
+            "kind": self.kind,
+            "axes": list(self.axis_names),
+            "dims": list(self.dims),
+            "p": self.p,
+            "d": self.d,
+            "backend": self.backend,
+            "requested_backend": self.requested_backend,
+            "variant": self.variant,
+            "round_order": list(self.order),
+            "n_chunks": self.n_chunks,
+            "block_shape": None if self.block_shape is None
+            else list(self.block_shape),
+            "dtype": None if self.dtype is None
+            else jnp.dtype(self.dtype).name,
+            "block_bytes": self.block_bytes,
+            "predicted_seconds": self.predicted_seconds,
+            "links": [{"alpha": l.alpha, "bandwidth": l.bandwidth}
+                      for l in self.links],
+            "tuned_from": self.tuned_from,
+            "parent": None if self.parent is None else list(self.parent),
+            "cache": "hit" if self._from_cache else "miss",
+        }
+
+    def __repr__(self):
+        return (f"{type(self).__name__}(dims={self.dims}, "
+                f"axes={self.axis_names}, backend={self.backend!r}, "
+                f"n_chunks={self.n_chunks})")
+
+    def _host_fn(self, mesh, local):
+        mesh = self._mesh if mesh is None else mesh
+        if mesh is None:
+            raise ValueError("plan was built without a Mesh; pass one")
+        if mesh not in self._host_fns:
+            import jax
+            axes = tuple(reversed(self.axis_names))
+            self._host_fns[mesh] = jax.jit(jax.shard_map(
+                local, mesh=mesh, in_specs=P(axes), out_specs=P(axes)))
+        return self._host_fns[mesh]
+
+
+class AllGatherPlan(_DimwisePlan):
+    """A resolved, reusable dimension-wise all-gather plan.
+
+    Construct via :meth:`TorusComm.all_gather`; never directly.
+    ``forward`` runs inside ``jax.shard_map`` over the torus axes.
+    """
+
+    kind = "allgather"
+
+    def forward(self, x):
+        """``x`` is this device's ``(*block)`` contribution; returns
+        ``(p, *block)`` with ``out[i]`` = rank ``i``'s block."""
+        if self.backend == "direct":
+            return _direct_allgather_impl(x, self.axis_names)
+        return _allgather_impl(x, self.axis_names, round_order=self.order,
+                               n_chunks=self.n_chunks)
+
+    def host_fn(self, mesh: Mesh | None = None):
+        """Jitted host-level all-gather over a global ``(p, *block)``
+        operand (``x[r]`` = rank r's contribution); returns
+        ``(p, p, *block)`` — every rank's gathered buffer."""
+        return self._host_fn(mesh, lambda xl: self.forward(xl[0])[None])
+
+
+class ReduceScatterPlan(_DimwisePlan):
+    """A resolved, reusable dimension-wise reduce-scatter plan.
+
+    Construct via :meth:`TorusComm.reduce_scatter`; never directly.
+    The d-stage form reduces in a different association order than the
+    direct collective: exact dtypes are bit-identical, floats agree to
+    rounding.
+    """
+
+    kind = "reduce_scatter"
+
+    def forward(self, x):
+        """``x`` is ``(p, *block)``, block ``i`` this device's term for
+        rank ``i``'s reduction; returns ``(*block)`` = the full sum for
+        this rank."""
+        if self.backend == "direct":
+            return _direct_reduce_scatter_impl(x, self.axis_names)
+        return _reduce_scatter_impl(x, self.axis_names,
+                                    round_order=self.order,
+                                    n_chunks=self.n_chunks)
+
+    def host_fn(self, mesh: Mesh | None = None):
+        """Jitted host-level reduce-scatter over a global ``(p, p,
+        *block)`` operand (``x[r, i]`` = rank r's term for rank i);
+        returns ``(p, *block)`` — ``out[r] = sum_s x[s, r]``."""
+        return self._host_fn(mesh, lambda xl: self.forward(xl[0])[None])
+
+
+def _build_dimwise_plan(cls, source, axis_names, block_shape, dtype, *,
+                        backend, variant, round_order, n_chunks, links,
+                        parent):
+    """Resolution + registry for the gather-family plans (shares the
+    ``core.plan`` LRU, stats, and teardown machinery)."""
+    axis_names = _as_tuple(axis_names)
+    if isinstance(source, Mesh):
+        mesh = source
+        fact = get_factorization(mesh, axis_names, variant=variant)
+        dims = fact.dims
+        dev_key = device_fingerprint(mesh)
+    else:
+        dims = tuple(int(s) for s in source)
+        fact = TorusFactorization(axis_names, dims, variant)
+        mesh, dev_key = None, None
+    if backend not in GATHER_BACKENDS:
+        raise ValueError(f"unknown {cls.kind} backend {backend!r}; "
+                         f"expected one of {GATHER_BACKENDS}")
+    link_models = resolve_links(links, dims, axis_names)
+    _, active = _skip_trivial(axis_names, dims)
+    order = _check_order(round_order, len(active))
+
+    p = math.prod(dims)
+    block_bytes = None
+    if block_shape is not None and dtype is not None:
+        block_bytes = math.prod(tuple(block_shape)) \
+            * jnp.dtype(dtype).itemsize
+
+    links_key = None if links is None else link_models
+    key = (cls.kind, dev_key, dims, axis_names,
+           None if block_shape is None else tuple(block_shape),
+           None if dtype is None else jnp.dtype(dtype).name,
+           backend, variant,
+           None if round_order is None else tuple(round_order),
+           int(n_chunks), links_key, parent)
+    cached = _planmod._registry_fetch(key)
+    if cached is not None:
+        return cached
+
+    tuned_from = None
+    predicted = None
+    if backend == "tuned":
+        if block_bytes is None:
+            raise ValueError(f'backend="tuned" needs block_shape and dtype '
+                             f"for the {cls.kind} cost model")
+        sched = choose_dimwise_algorithm(cls.kind, dims, link_models,
+                                         float(block_bytes),
+                                         round_order=round_order)
+        resolved, tuned_from = sched.kind, "model"
+        predicted = sched.predicted_seconds
+    else:
+        resolved = backend
+        if block_bytes is not None:
+            if resolved == "direct":
+                slowest = slowest_active_link(dims, link_models)
+                predicted = predict_direct(p, float(block_bytes), slowest)
+            else:
+                predict = predict_allgather if cls.kind == "allgather" \
+                    else predict_reduce_scatter
+                predicted = predict(dims, link_models, float(block_bytes),
+                                    p, round_order=round_order)
+    plan = cls(fact, requested_backend=backend, backend=resolved,
+               order=order, n_chunks=max(1, int(n_chunks)),
+               block_shape=block_shape, dtype=dtype, links=link_models,
+               predicted_seconds=predicted, mesh=mesh,
+               tuned_from=tuned_from, parent=parent)
+    return _planmod._registry_store(key, plan)
+
+
+# ---------------------------------------------------------------------------
+# The communicator
+# ---------------------------------------------------------------------------
+
+_COMMS: LRUCache = LRUCache(capacity=64)
+
+
+class TorusComm:
+    """A cached Cartesian communicator over a torus factorization.
+
+    Construct via :func:`torus_comm`; never directly.  The comm owns the
+    factorization descriptor (``fact``), the mesh (when device-backed),
+    the device fingerprint key, the tuning-DB handle, and the registry
+    keys of every plan resolved through it — its slice of the plan LRU,
+    released by :meth:`free`.  All collective construction goes through
+    the factory methods; execution stays on the returned plan objects.
+    """
+
+    def __init__(self, fact: TorusFactorization, *, mesh: Mesh | None,
+                 dev_key, parent: "TorusComm | None" = None, db=None):
+        self.fact = fact
+        self.mesh = mesh
+        self.dev_key = dev_key
+        self.parent = parent
+        self._db = db
+        self._source = mesh if mesh is not None else fact.dims
+        self._plan_keys: set = set()
+        self._subs: dict[tuple, TorusComm] = {}
+        # registry slot (cleared on free) and immutable identity (never
+        # cleared — children key their lineage on it)
+        self._comm_key = None
+        self._identity = None
+        self._freed = False
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self.fact.axis_names
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.fact.dims
+
+    @property
+    def p(self) -> int:
+        return self.fact.p
+
+    @property
+    def d(self) -> int:
+        return self.fact.d
+
+    @property
+    def variant(self) -> str:
+        return self.fact.variant
+
+    def __repr__(self):
+        par = f", parent={self.parent.axis_names}" if self.parent else ""
+        return (f"TorusComm(dims={self.dims}, axes={self.axis_names}, "
+                f"variant={self.variant!r}{par})")
+
+    # -- the dimension-wise split (user-visible, recursive) ----------------
+
+    def sub(self, axes) -> "TorusComm":
+        """The paper's dimension-wise communicator split: a child comm
+        over a subset of this comm's axes (any order; recursive).
+
+        Child plans share the global plan registry with top-level comms
+        over the same axes — ``comm.sub(axes).all_to_all(...)`` returns
+        the identical cached plan object ``torus_comm(mesh, axes)
+        .all_to_all(...)`` does, so sub-comm collectives are bit-exact
+        with top-level ones by construction.  (The gather-family plans
+        additionally key on the split lineage so their
+        ``describe()["parent"]`` is stable: a sub-comm all-gather is a
+        distinct — still bit-exact — registry entry from the top-level
+        one.)
+        """
+        axes = _as_tuple(axes)
+        if len(set(axes)) != len(axes):
+            raise ValueError(f"duplicate axes in {axes}")
+        missing = [a for a in axes if a not in self.axis_names]
+        if missing:
+            raise ValueError(f"axes {missing} not in communicator axes "
+                             f"{self.axis_names}")
+        if axes in self._subs and not self._subs[axes]._freed:
+            return self._subs[axes]
+        if self.mesh is not None:
+            source = self.mesh
+        else:
+            source = tuple(self.dims[self.axis_names.index(a)]
+                           for a in axes)
+        child = torus_comm(source, axes, variant=self.variant,
+                           db=self._db, _parent=self)
+        self._subs[axes] = child
+        return child
+
+    # -- collective factories ----------------------------------------------
+
+    def _note(self, plan):
+        key = getattr(plan, "_registry_key", None)
+        if key is not None:
+            self._plan_keys.add(key)
+            # A long-lived comm resolving many distinct shapes must not
+            # outgrow the plan registry it indexes into: prune keys whose
+            # plans the LRU has already evicted.
+            if len(self._plan_keys) > 2 * _planmod._PLANS.capacity:
+                self._plan_keys = {k for k in self._plan_keys
+                                   if k in _planmod._PLANS}
+        return plan
+
+    def all_to_all(self, block_shape=None, dtype=None, *,
+                   backend: str = "tuned", round_order=None,
+                   reverse_round_order=None, n_chunks: int = 0,
+                   max_chunks: int = 8, links=None,
+                   compute_seconds: float = 0.0, db=None):
+        """Build (or fetch) the :class:`~repro.core.plan.A2APlan` for one
+        per-rank ``(block_shape, dtype)`` block — see
+        :func:`~repro.core.plan.plan_all_to_all` for the knobs."""
+        return self._note(_planmod._build_dense_plan(
+            self._source, self.axis_names, block_shape, dtype,
+            backend=backend, variant=self.variant, round_order=round_order,
+            reverse_round_order=reverse_round_order, n_chunks=n_chunks,
+            max_chunks=max_chunks, links=links,
+            compute_seconds=compute_seconds,
+            db=self._db if db is None else db))
+
+    def ragged_all_to_all(self, row_shape=(), dtype="float32", *,
+                          max_count: int, avg_count: float | None = None,
+                          backend: str = "tuned", round_order=None,
+                          reverse_round_order=None, n_chunks: int = 0,
+                          max_chunks: int = 8, links=None,
+                          compute_seconds: float = 0.0, db=None):
+        """Build (or fetch) the :class:`~repro.core.plan.RaggedA2APlan`
+        (Alltoallv semantics) — see
+        :func:`~repro.core.plan.plan_ragged_all_to_all` for the knobs."""
+        return self._note(_planmod._build_ragged_plan(
+            self._source, self.axis_names, row_shape, dtype,
+            max_count=max_count, avg_count=avg_count, backend=backend,
+            variant=self.variant, round_order=round_order,
+            reverse_round_order=reverse_round_order, n_chunks=n_chunks,
+            max_chunks=max_chunks, links=links,
+            compute_seconds=compute_seconds,
+            db=self._db if db is None else db))
+
+    def all_gather(self, block_shape=None, dtype=None, *,
+                   backend: str = "tuned", round_order=None,
+                   n_chunks: int = 1, links=None) -> AllGatherPlan:
+        """Build (or fetch) an :class:`AllGatherPlan`: each rank
+        contributes one ``(block_shape, dtype)`` block, every rank ends
+        with all ``p`` in torus-rank order — d per-axis stages
+        (``backend="factorized"``), one product-communicator collective
+        (``"direct"``), or the cost-model choice (``"tuned"``)."""
+        return self._note(_build_dimwise_plan(
+            AllGatherPlan, self._source, self.axis_names, block_shape,
+            dtype, backend=backend, variant=self.variant,
+            round_order=round_order, n_chunks=n_chunks, links=links,
+            parent=self._parent_axes()))
+
+    def reduce_scatter(self, block_shape=None, dtype=None, *,
+                       backend: str = "tuned", round_order=None,
+                       n_chunks: int = 1, links=None) -> ReduceScatterPlan:
+        """Build (or fetch) a :class:`ReduceScatterPlan`: each rank
+        contributes ``p`` blocks, rank ``i`` ends with the sum of every
+        rank's block ``i`` — same backend family as :meth:`all_gather`."""
+        return self._note(_build_dimwise_plan(
+            ReduceScatterPlan, self._source, self.axis_names, block_shape,
+            dtype, backend=backend, variant=self.variant,
+            round_order=round_order, n_chunks=n_chunks, links=links,
+            parent=self._parent_axes()))
+
+    def _parent_axes(self):
+        return None if self.parent is None else self.parent.axis_names
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def free(self) -> None:
+        """The delete callback (Listing 2's ``torusdel``): recursively
+        free sub-comms, drop every plan resolved through this comm from
+        the registry (their nested entries and factorization refs go with
+        them via the shared teardown), and retire the comm's own registry
+        entry.  Idempotent; the comm object stays usable for lookups but
+        a later ``torus_comm`` call builds a fresh one."""
+        for child in list(self._subs.values()):
+            child.free()
+        self._subs.clear()
+        for key in self._plan_keys:
+            _planmod._drop_plan(key)
+        self._plan_keys.clear()
+        if self._comm_key is not None:
+            # only retire our own registry entry: a fresh comm may have
+            # taken the key since a previous free() of this object
+            if _COMMS._data.get(self._comm_key) is self:
+                _COMMS.pop(self._comm_key)
+            self._comm_key = None
+        self._freed = True
+
+    def __enter__(self) -> "TorusComm":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.free()
+
+    # -- introspection ------------------------------------------------------
+
+    def describe(self) -> dict:
+        """Stable, JSON-serializable summary of the communicator."""
+        return {
+            "kind": "comm",
+            "axes": list(self.axis_names),
+            "dims": list(self.dims),
+            "p": self.p,
+            "d": self.d,
+            "variant": self.variant,
+            "parent": None if self.parent is None
+            else list(self.parent.axis_names),
+            "device_backed": self.mesh is not None,
+            "plans": len(self._plan_keys),
+            "subs": sorted(list(a) for a in self._subs),
+        }
+
+    def stats(self) -> dict:
+        """One call for the whole cache picture: this comm's identity and
+        plan slice, plus the unified factorization / plan / autotune /
+        tuning-DB state that used to take three separate calls."""
+        live = sum(1 for k in self._plan_keys if k in _planmod._PLANS)
+        out = unified_stats(db=self._db)
+        out["comm"] = {**self.describe(),
+                       "plans_live": live,
+                       "freed": self._freed}
+        return out
+
+
+def unified_stats(db=None) -> dict:
+    """Registry-wide cache state in one dict: factorization descriptors
+    (``cache_stats``), the plan LRU (``plan_cache_stats``), autotune
+    counters (``autotune_stats``), the tuning-DB identity/generation, and
+    the communicator registry itself."""
+    from .autotune import autotune_stats, get_default_db
+    from .plan import plan_cache_stats
+    db = db if db is not None else get_default_db()
+    return {
+        "factorization": cache_stats(),
+        "plans": plan_cache_stats(),
+        "autotune": autotune_stats(),
+        "tuning_db": {"path": db.path_key, "generation": db.generation()},
+        "comms": comm_registry_stats(),
+    }
+
+
+def torus_comm(mesh_or_dims, axis_names=None, *, d: int | None = None,
+               variant: str = "natural", db=None,
+               _parent: TorusComm | None = None) -> TorusComm:
+    """Build (or fetch from the LRU registry) a :class:`TorusComm`.
+
+    Args:
+      mesh_or_dims: a ``Mesh`` (the comm is keyed by the stable device
+        fingerprint), an explicit per-axis size tuple, fastest digit
+        first (device-agnostic — the inside-``shard_map`` path), or an
+        int ``p`` with ``d=`` (the ``MPI_Dims_create`` +
+        ``MPI_Cart_create`` path: ``p`` is factorized into ``d`` balanced
+        dims and a Cartesian mesh is built over the first ``p`` local
+        devices).
+      axis_names: torus dimensions, fastest digit first.  May be omitted
+        with ``d=``: the product of the mesh axes (or ``p``) is
+        factorized via ``dims_create`` and a fresh Cartesian mesh with
+        synthetic ``t0..t{d-1}`` axes is created over the same devices.
+      d: balanced-factorization degree when ``axis_names`` is omitted.
+      variant: per-round formulation for the comm's collectives,
+        "natural" (zero-copy) or "paper".
+      db: tuning-DB handle the comm's ``backend="autotune"`` plans
+        consult (default: the process-wide default DB).
+    """
+    if isinstance(mesh_or_dims, Mesh) and axis_names is None:
+        if d is None:
+            raise ValueError("need either axis_names or d")
+        seed = get_factorization(mesh_or_dims, None, d=d, variant=variant)
+        mesh_or_dims = cart_create(mesh_or_dims, seed.dims, seed.axis_names)
+        axis_names = seed.axis_names
+    if isinstance(mesh_or_dims, int):
+        if d is None:
+            raise ValueError("an int p needs d= (the dims_create path)")
+        from .dims import dims_create
+        dims = tuple(reversed(dims_create(mesh_or_dims, d)))
+        if axis_names is None:
+            axis_names = tuple(f"t{i}" for i in range(len(dims)))
+        mesh_or_dims = cart_create(mesh_or_dims, dims, _as_tuple(axis_names))
+
+    axis_names = _as_tuple(axis_names)
+    if isinstance(mesh_or_dims, Mesh):
+        mesh = mesh_or_dims
+        fact = get_factorization(mesh, axis_names, variant=variant)
+        dev_key = device_fingerprint(mesh)
+    else:
+        dims = tuple(int(s) for s in mesh_or_dims)
+        if len(dims) != len(axis_names):
+            raise ValueError(f"{len(dims)} dims for {len(axis_names)} axes")
+        fact = TorusFactorization(axis_names, dims, variant)
+        mesh, dev_key = None, None
+
+    # A child is keyed by the parent's full identity chain (not just its
+    # axis names): two parents over different tori may split into
+    # same-axes children, and those must be distinct comms with the
+    # right lineage.  The DB handle is part of the identity too: a comm
+    # bound to a custom tuning DB must not be returned to (or shadowed
+    # by) callers using the process default — autotune records would
+    # silently land in the wrong database.
+    parent_key = None if _parent is None else _parent._identity
+    db_key = None if db is None else db.path_key
+    key = (dev_key, fact.dims, axis_names, variant, parent_key, db_key)
+    cached = _COMMS.get(key)
+    if cached is not None and not cached._freed:
+        return cached
+    comm = TorusComm(fact, mesh=mesh, dev_key=dev_key, parent=_parent,
+                     db=db)
+    comm._comm_key = comm._identity = key
+    _COMMS.put(key, comm)
+    return comm
+
+
+def free_comms() -> None:
+    """Drop every cached communicator (their plans stay in the plan
+    registry — use ``TorusComm.free`` for the full per-comm teardown, or
+    ``core.plan.free_plans`` for the registry-wide one)."""
+    _COMMS.clear()
+
+
+def comm_registry_stats() -> dict:
+    out = dict(_COMMS.stats)
+    out["size"] = len(_COMMS)
+    out["capacity"] = _COMMS.capacity
+    return out
+
+
+__all__ = [
+    "AllGatherPlan",
+    "GATHER_BACKENDS",
+    "ReduceScatterPlan",
+    "TorusComm",
+    "comm_registry_stats",
+    "free_comms",
+    "torus_comm",
+    "unified_stats",
+]

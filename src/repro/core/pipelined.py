@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from .dims import dims_create
 from .overlap import overlapped_all_to_all, pipelined_all_to_all
-from .tuning import LinkModel
+from .tuning import LinkModel, resolve_links
 from .tuning import choose_chunks as _choose_chunks
 
 __all__ = ["choose_chunks", "overlapped_all_to_all", "pipelined_all_to_all"]
@@ -32,10 +32,13 @@ def choose_chunks(p: int, d: int, block_bytes: float,
     d-way factorization of ``p`` (legacy signature; see
     ``tuning.choose_chunks`` for the native per-axis form).
 
-    ``link`` prices every axis uniformly; pass ``links=`` (a length-d
-    sequence) to override per axis — e.g. the measured fits recorded by
-    ``core.autotune`` — which takes precedence over ``link``.
+    ``link`` prices every axis uniformly; ``links=`` (a length-d
+    sequence) overrides per axis — e.g. the measured fits recorded by
+    ``core.autotune``.  Both spellings merge in ``tuning.resolve_links``,
+    the single link-plumbing helper.
     """
     dims = dims_create(p, d)
-    return _choose_chunks(dims, link if links is None else links,
+    return _choose_chunks(dims,
+                          resolve_links(link if links is None else links,
+                                        dims),
                           block_bytes, max_chunks=max_chunks)

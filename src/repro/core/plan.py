@@ -30,6 +30,16 @@ trace time, at module setup, or from the legacy free-function shims in
 ``core.factorized`` / ``core.overlap`` (which now just build-or-fetch a
 plan and warn).
 
+Since the ``TorusComm`` redesign (``core.comm``) the communicator is the
+API root: ``torus_comm(mesh, axes).all_to_all(...)`` is the primary
+spelling, and :func:`plan_all_to_all` / :func:`plan_ragged_all_to_all`
+are thin delegators that build or reuse the *implicit* comm — same
+registry entries, same describe dicts, zero migration pressure for PR 2
+era callers.  This module keeps the plan classes, the resolution
+machinery (``_build_dense_plan`` / ``_build_ragged_plan``), and the
+shared LRU registry with its teardown callback (evicting a composite
+plan drops its nested dense entries and releases factorization refs).
+
 ``plan.describe()`` returns a stable dict (dims, backend, predicted cost,
 chunks, cache hit/miss) for logging, goldens, and the dry-run artifacts.
 
@@ -64,27 +74,20 @@ from .factorized import (
 )
 from .overlap import _check_order, _overlapped_impl, _overlapped_tiled_impl
 from .tuning import (
-    DCN,
-    ICI,
+    DCN_AXES,            # noqa: F401  (re-exported; moved to core.tuning)
     LinkModel,
     Schedule,
     choose_algorithm,
+    default_links,   # noqa: F401  (re-exported; moved to core.tuning)
     predict_direct,
     predict_factorized,
     predict_overlapped,
+    resolve_links,
+    slowest_active_link,
 )
 
 BACKENDS = ("tuned", "autotune", "direct", "factorized", "pipelined",
             "overlap")
-
-# Mesh axes that cross the slow inter-pod network; everything else is
-# priced as ICI.  Overridable per plan via ``links=``.
-DCN_AXES = ("pod",)
-
-
-def default_links(axis_names) -> tuple[LinkModel, ...]:
-    """Per-axis link models: DCN for inter-pod axes, ICI otherwise."""
-    return tuple(DCN if a in DCN_AXES else ICI for a in axis_names)
 
 
 class A2APlan:
@@ -270,7 +273,80 @@ class A2APlan:
 # Construction + the plan registry
 # ---------------------------------------------------------------------------
 
-_PLANS: LRUCache = LRUCache(capacity=256)
+
+def _sub_plans(plan) -> tuple:
+    """Nested dense plans a composite plan owns (ragged: data + counts)."""
+    if isinstance(plan, RaggedA2APlan):
+        return (plan.data, plan.counts_plan)
+    return ()
+
+
+def _plan_fact(plan):
+    """The factorization descriptor behind any plan kind."""
+    fact = getattr(plan, "fact", None)
+    return plan.data.fact if fact is None else fact
+
+
+def _release_fact(fact) -> None:
+    """Drop the factorization registry entries for ``fact`` once no live
+    plan uses it — the paper's delete callback (Listing 2's ``torusdel``),
+    run from the plan layer so the two registries tear down together."""
+    for q in _PLANS.values():
+        if _plan_fact(q) == fact:
+            return
+    from . import cache as _cache
+    _cache.free(fact)
+
+
+def _on_plan_evict(plan) -> None:
+    """Teardown symmetry for the plan registry.
+
+    Evicting (or explicitly dropping) a composite plan also drops its
+    nested dense plans' registry entries — unless another live composite
+    still owns one (two ragged plans over the same torus share a counts
+    plan) — and the last plan over a factorization releases the
+    descriptor cache entry.  Without this, LRU churn through ragged plans
+    left orphaned ``(bucket, *row)`` / counts entries pinned in the
+    registry and factorization refs that ``cache_stats`` counted forever.
+    """
+    for subp in _sub_plans(plan):
+        key = getattr(subp, "_registry_key", None)
+        # only drop the entry if the registry still holds *this* object:
+        # after LRU churn a fresh equal-key plan (possibly a live
+        # composite's nested member) may occupy the slot
+        if key is None or _PLANS._data.get(key) is not subp:
+            continue
+        if any(subp in _sub_plans(q) for q in _PLANS.values()):
+            continue
+        dropped = _PLANS.pop(key)
+        if dropped is not None:
+            _on_plan_evict(dropped)
+    _release_fact(_plan_fact(plan))
+
+
+_PLANS: LRUCache = LRUCache(capacity=256, on_evict=_on_plan_evict)
+
+
+def _registry_fetch(key):
+    cached = _PLANS.get(key)
+    if cached is not None:
+        cached._from_cache = True
+        cached._fetches += 1
+    return cached
+
+
+def _registry_store(key, plan):
+    plan._registry_key = key
+    _PLANS.put(key, plan)
+    return plan
+
+
+def _drop_plan(key) -> None:
+    """Explicitly remove one plan entry, with the same teardown as LRU
+    eviction (used by ``TorusComm.free``)."""
+    plan = _PLANS.pop(key)
+    if plan is not None:
+        _on_plan_evict(plan)
 
 
 def _resolve(dims, axis_names, block_shape, dtype, requested_backend,
@@ -282,9 +358,7 @@ def _resolve(dims, axis_names, block_shape, dtype, requested_backend,
                          f"expected one of {BACKENDS}")
     if variant not in ("natural", "paper"):
         raise ValueError(f"unknown variant {variant!r}")
-    links = default_links(axis_names) if links is None else tuple(links)
-    if len(links) != len(dims):
-        raise ValueError(f"{len(links)} links for {len(dims)} dims")
+    links = resolve_links(links, dims, axis_names)
 
     # Round orders act on the *active* (size > 1) dimensions, matching the
     # kernels' skip-trivial semantics; validated here, at plan time.
@@ -316,12 +390,7 @@ def _resolve(dims, axis_names, block_shape, dtype, requested_backend,
     sched = None
     if block_bytes is not None:
         if backend == "direct":
-            # price only links that carry traffic: a size-1 axis (e.g. a
-            # trivial "pod" dim, or an unfitted placeholder link from a
-            # tuning-DB record) must not masquerade as the bottleneck
-            active_links = [l for Dk, l in zip(dims, links) if Dk > 1] \
-                or list(links)
-            slowest = min(active_links, key=lambda l: l.bandwidth)
+            slowest = slowest_active_link(dims, links)
             t = predict_direct(p, float(block_bytes), slowest) \
                 + compute_seconds
         elif backend == "factorized":
@@ -341,6 +410,13 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
                     max_chunks: int = 8, links=None,
                     compute_seconds: float = 0.0, db=None) -> A2APlan:
     """Build (or fetch from the LRU registry) an :class:`A2APlan`.
+
+    A thin delegator since the ``TorusComm`` redesign: it builds or
+    reuses the *implicit communicator* for ``(devices, axes, variant)``
+    (``core.comm.torus_comm``) and constructs the plan through it, so
+    legacy callers and the PR 2 deprecation shims share the comm-rooted
+    path with no behavior change — new code should hold a
+    :class:`~repro.core.comm.TorusComm` and call ``comm.all_to_all``.
 
     Args:
       mesh_or_axis_dims: a ``Mesh`` (the torus axes are looked up on it and
@@ -369,6 +445,24 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
       db: tuning-DB handle for ``backend="autotune"`` (default: the
         ``REPRO_TUNING_DB`` / ``~/.cache/repro/tuning.json`` database).
     """
+    from .comm import torus_comm
+    return torus_comm(mesh_or_axis_dims, axis_names,
+                      variant=variant).all_to_all(
+        block_shape, dtype, backend=backend, round_order=round_order,
+        reverse_round_order=reverse_round_order, n_chunks=n_chunks,
+        max_chunks=max_chunks, links=links,
+        compute_seconds=compute_seconds, db=db)
+
+
+def _build_dense_plan(mesh_or_axis_dims, axis_names, block_shape=None,
+                      dtype=None, *, backend: str = "tuned",
+                      variant: str = "natural", round_order=None,
+                      reverse_round_order=None, n_chunks: int = 0,
+                      max_chunks: int = 8, links=None,
+                      compute_seconds: float = 0.0, db=None) -> A2APlan:
+    """The resolution machinery behind ``TorusComm.all_to_all`` (and the
+    :func:`plan_all_to_all` delegator): all once-per-plan decisions plus
+    the LRU registry."""
     axis_names = _as_tuple(axis_names)
     mesh = None
     if isinstance(mesh_or_axis_dims, Mesh):
@@ -383,7 +477,10 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
         fact = TorusFactorization(axis_names, dims, variant)
         dev_key = None
 
-    links_key = None if links is None else tuple(links)
+    # None stays None in the key (under "autotune" it means measured
+    # links may substitute); anything else is normalized so a uniform
+    # LinkModel and its broadcast tuple key identically.
+    links_key = None if links is None else resolve_links(links, dims)
     key = (dev_key, dims, axis_names, None if block_shape is None
            else tuple(block_shape),
            None if dtype is None else jnp.dtype(dtype).name,
@@ -400,10 +497,8 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
         from .autotune import get_default_db
         db = db if db is not None else get_default_db()
         key = key + (db.path_key, db.generation())
-    cached = _PLANS.get(key)
+    cached = _registry_fetch(key)
     if cached is not None:
-        cached._from_cache = True
-        cached._fetches += 1
         return cached
 
     def build(req_backend, order_, chunks_, links_):
@@ -459,8 +554,7 @@ def plan_all_to_all(mesh_or_axis_dims, axis_names, block_shape=None,
                    else tuple(block_shape), dtype=dtype, links=link_models,
                    schedule=sched, mesh=mesh, tuned_from=tuned_from,
                    measured=measured)
-    _PLANS.put(key, plan)
-    return plan
+    return _registry_store(key, plan)
 
 
 # ---------------------------------------------------------------------------
@@ -670,6 +764,11 @@ def plan_ragged_all_to_all(mesh_or_axis_dims, axis_names, row_shape=(),
                            db=None) -> RaggedA2APlan:
     """Build (or fetch from the LRU registry) a :class:`RaggedA2APlan`.
 
+    Like :func:`plan_all_to_all`, a thin delegator since the ``TorusComm``
+    redesign: it builds or reuses the implicit communicator and delegates
+    to ``comm.ragged_all_to_all`` — new code should construct through a
+    :class:`~repro.core.comm.TorusComm` directly.
+
     Args mirror :func:`plan_all_to_all` with the ragged additions:
 
       row_shape, dtype: shape/dtype of ONE ragged row (the unit the
@@ -687,6 +786,27 @@ def plan_ragged_all_to_all(mesh_or_axis_dims, axis_names, row_shape=(),
         the padded block shape.  The counts plan is always resolved as
         "tuned" over its ``(p,)`` int32 block.
     """
+    from .comm import torus_comm
+    return torus_comm(mesh_or_axis_dims, axis_names,
+                      variant=variant).ragged_all_to_all(
+        row_shape, dtype, max_count=max_count, avg_count=avg_count,
+        backend=backend, round_order=round_order,
+        reverse_round_order=reverse_round_order, n_chunks=n_chunks,
+        max_chunks=max_chunks, links=links,
+        compute_seconds=compute_seconds, db=db)
+
+
+def _build_ragged_plan(mesh_or_axis_dims, axis_names, row_shape=(),
+                       dtype="float32", *, max_count: int,
+                       avg_count: float | None = None,
+                       backend: str = "tuned", variant: str = "natural",
+                       round_order=None, reverse_round_order=None,
+                       n_chunks: int = 0, max_chunks: int = 8,
+                       links=None, compute_seconds: float = 0.0,
+                       db=None) -> RaggedA2APlan:
+    """The resolution machinery behind ``TorusComm.ragged_all_to_all``
+    (and the :func:`plan_ragged_all_to_all` delegator): the bucket, the
+    nested dense data/counts plans, and the shared LRU registry."""
     axis_names = _as_tuple(axis_names)
     if isinstance(mesh_or_axis_dims, Mesh):
         dims = tuple(mesh_or_axis_dims.shape[n] for n in axis_names)
@@ -709,7 +829,7 @@ def plan_ragged_all_to_all(mesh_or_axis_dims, axis_names, row_shape=(),
     row_shape = tuple(int(s) for s in row_shape)
     p = math.prod(dims)
 
-    links_key = None if links is None else tuple(links)
+    links_key = None if links is None else resolve_links(links, dims)
     key = ("ragged", dev_key, dims, axis_names, row_shape,
            jnp.dtype(dtype).name, max_count, avg, backend, variant,
            None if round_order is None else tuple(round_order),
@@ -721,24 +841,22 @@ def plan_ragged_all_to_all(mesh_or_axis_dims, axis_names, row_shape=(),
         from .autotune import get_default_db
         db = db if db is not None else get_default_db()
         key = key + (db.path_key, db.generation())
-    cached = _PLANS.get(key)
+    cached = _registry_fetch(key)
     if cached is not None:
-        cached._from_cache = True
-        cached._fetches += 1
         return cached
 
-    data = plan_all_to_all(mesh_or_axis_dims, axis_names,
-                           (bucket,) + row_shape, dtype, backend=backend,
-                           variant=variant, round_order=round_order,
-                           reverse_round_order=reverse_round_order,
-                           n_chunks=n_chunks, max_chunks=max_chunks,
-                           links=links, compute_seconds=compute_seconds,
-                           db=db)
-    counts = plan_all_to_all(mesh_or_axis_dims, axis_names, (p,), jnp.int32,
-                             backend="tuned", variant=variant,
-                             round_order=round_order,
+    data = _build_dense_plan(mesh_or_axis_dims, axis_names,
+                             (bucket,) + row_shape, dtype, backend=backend,
+                             variant=variant, round_order=round_order,
                              reverse_round_order=reverse_round_order,
-                             max_chunks=1, links=links)
+                             n_chunks=n_chunks, max_chunks=max_chunks,
+                             links=links, compute_seconds=compute_seconds,
+                             db=db)
+    counts = _build_dense_plan(mesh_or_axis_dims, axis_names, (p,),
+                               jnp.int32, backend="tuned", variant=variant,
+                               round_order=round_order,
+                               reverse_round_order=reverse_round_order,
+                               max_chunks=1, links=links)
     predicted = None
     if data.schedule is not None and counts.schedule is not None:
         predicted = data.schedule.predicted_seconds \
@@ -746,13 +864,18 @@ def plan_ragged_all_to_all(mesh_or_axis_dims, axis_names, row_shape=(),
     plan = RaggedA2APlan(data, counts, max_count=max_count, avg_count=avg,
                          row_shape=row_shape, dtype=dtype,
                          predicted_seconds=predicted)
-    _PLANS.put(key, plan)
-    return plan
+    return _registry_store(key, plan)
 
 
 def free_plans() -> None:
-    """Evict every cached plan (the registry-wide delete callback)."""
-    _PLANS.clear()
+    """Evict every cached plan, running the delete callback on each — so
+    composite plans drop their nested entries and the factorization refs
+    they pinned are released symmetrically with LRU eviction."""
+    while True:
+        keys = _PLANS.keys()
+        if not keys:
+            return
+        _drop_plan(keys[0])
 
 
 def set_plan_cache_capacity(capacity: int) -> None:

@@ -59,6 +59,34 @@ def per_axis_links(links, d: int) -> tuple[LinkModel, ...]:
     return links
 
 
+# Mesh axes that cross the slow inter-pod network; everything else is
+# priced as ICI.  Overridable per plan via ``links=``.
+DCN_AXES = ("pod",)
+
+
+def default_links(axis_names) -> tuple[LinkModel, ...]:
+    """Per-axis link models: DCN for inter-pod axes, ICI otherwise."""
+    return tuple(DCN if a in DCN_AXES else ICI for a in axis_names)
+
+
+def resolve_links(links, dims, axis_names=None) -> tuple[LinkModel, ...]:
+    """The one merge point for link-model plumbing.
+
+    ``None`` resolves to the axis-name defaults (DCN for ``pod``-like
+    axes when names are known, uniform ICI otherwise); a single
+    :class:`LinkModel` broadcasts to every axis; a per-axis sequence is
+    length-validated.  Every layer that accepts a link override —
+    ``core.plan``, ``core.comm``, the ``core.pipelined`` facade — routes
+    through here, so the uniform-``link`` and per-axis-``links`` calling
+    conventions can never diverge.
+    """
+    if links is None:
+        if axis_names is not None:
+            return default_links(axis_names)
+        return (ICI,) * len(dims)
+    return per_axis_links(links, len(dims))
+
+
 @dataclass(frozen=True)
 class Schedule:
     """A concrete algorithm choice for one all-to-all call."""
@@ -195,6 +223,109 @@ def choose_ragged_algorithm(axis_dims, axis_links, row_bytes: float,
                     n_chunks=sched.n_chunks)
 
 
+def slowest_active_link(dims, links) -> LinkModel:
+    """The bandwidth bottleneck among links that carry traffic: a size-1
+    axis (a trivial "pod" dim, or an unfitted placeholder link from a
+    tuning-DB record) must not masquerade as the bottleneck.  The one
+    definition of the direct collective's pricing link, shared by every
+    policy (``choose_algorithm``, ``choose_dimwise_algorithm``,
+    ``core.plan``, ``core.comm``)."""
+    links = per_axis_links(links, len(dims))
+    active = [l for Dk, l in zip(dims, links) if Dk > 1] or list(links)
+    return min(active, key=lambda l: l.bandwidth)
+
+
+def _active_stages(dims, links, p: int, round_order):
+    """Shared prologue of the gather-family predictors: per-axis links,
+    ``p`` consistency, the active (size > 1) stages, and the round order
+    *over those active stages* — the same convention the kernels and the
+    plan layer validate (``round_order=(1, 0)`` on dims ``(1, 4, 4)``
+    permutes the two size-4 stages; the trivial axis has no round)."""
+    links = per_axis_links(links, len(dims))
+    if p != math.prod(dims):
+        raise ValueError(f"p={p} != prod(dims)={math.prod(dims)}")
+    active = [(Dk, l) for Dk, l in zip(dims, links) if Dk > 1]
+    order = tuple(round_order) if round_order is not None \
+        else tuple(range(len(active)))
+    if sorted(order) != list(range(len(active))):
+        raise ValueError(f"round_order {order} is not a permutation of "
+                         f"0..{len(active) - 1}")
+    return active, order
+
+
+def predict_allgather(dims, links, block_bytes: float, p: int,
+                      round_order=None) -> float:
+    """Alpha-beta prediction for the d-stage dimension-wise all-gather.
+
+    Stage ``k`` (in the given round order) ships the payload gathered so
+    far — ``block_bytes * prod(D_j for earlier stages j)`` — to the
+    ``D[k]-1`` peers of the dimension-``k`` communicator.  The bandwidth
+    term telescopes to exactly ``(p-1) * block_bytes`` for any order
+    (all-gather has no volume win to factorize, unlike Theorem 1's
+    all-to-all), so the d-stage form wins purely on the latency term:
+    ``sum_k (D[k]-1)`` messages instead of ``p-1``.  The order knob
+    matters only on heterogeneous links (put the slow axis early, while
+    the payload is small).
+    """
+    active, order = _active_stages(dims, links, p, round_order)
+    t, held = 0.0, float(block_bytes)
+    for k in order:
+        Dk, link = active[k]
+        t += (Dk - 1) * (link.alpha + held / link.bandwidth)
+        held *= Dk
+    return t
+
+
+def predict_reduce_scatter(dims, links, block_bytes: float, p: int,
+                           round_order=None) -> float:
+    """Alpha-beta prediction for the d-stage dimension-wise reduce-scatter.
+
+    The mirror of :func:`predict_allgather`: stage ``k`` holds
+    ``block_bytes * p / prod(D_j for earlier stages j)`` and ships the
+    ``(D[k]-1)/D[k]`` fraction bound for other group members, shrinking
+    the payload ``D[k]``-fold.  The bandwidth term telescopes to
+    ``(p-1) * block_bytes`` for any order (the dual of the all-gather),
+    so here too the d-stage form wins on the latency term; on
+    heterogeneous links the slow axis wants to go *late*, once the
+    payload has shrunk.
+    """
+    active, order = _active_stages(dims, links, p, round_order)
+    t, held = 0.0, float(block_bytes) * p
+    for k in order:
+        Dk, link = active[k]
+        t += (Dk - 1) * link.alpha + held * (Dk - 1) / (Dk * link.bandwidth)
+        held /= Dk
+    return t
+
+
+def choose_dimwise_algorithm(kind: str, axis_dims, axis_links,
+                             block_bytes: float, *,
+                             round_order=None) -> Schedule:
+    """Pick direct vs factorized for a dimension-wise gather collective.
+
+    ``kind`` is ``"allgather"`` or ``"reduce_scatter"``; candidates are
+    the single product-communicator collective (priced like
+    :func:`predict_direct`: ``p-1`` peer messages of one block, bounded
+    by the slowest link that carries traffic) and the d per-axis stages
+    (:func:`predict_allgather` / :func:`predict_reduce_scatter`), the
+    same policy shape as :func:`choose_algorithm` for the all-to-all.
+    """
+    if kind not in ("allgather", "reduce_scatter"):
+        raise ValueError(f"unknown dimension-wise collective kind {kind!r}")
+    axis_links = per_axis_links(axis_links, len(axis_dims))
+    p = math.prod(axis_dims)
+    slowest = slowest_active_link(axis_dims, axis_links)
+    best = Schedule("direct", (p,), (slowest,),
+                    predict_direct(p, block_bytes, slowest))
+    predict = predict_allgather if kind == "allgather" \
+        else predict_reduce_scatter
+    t = predict(axis_dims, axis_links, block_bytes, p,
+                round_order=round_order)
+    if t < best.predicted_seconds:
+        best = Schedule("factorized", tuple(axis_dims), axis_links, t)
+    return best
+
+
 def choose_chunks(dims, links, block_bytes: float, *, max_chunks: int = 8,
                   compute_seconds: float = 0.0) -> int:
     """Chunk count minimizing ``predict_overlapped`` (1 = don't pipeline).
@@ -247,11 +378,7 @@ def choose_algorithm(axis_dims: tuple[int, ...],
     """
     axis_links = per_axis_links(axis_links, len(axis_dims))
     p = math.prod(axis_dims)
-    # direct is bounded by the slowest link that carries traffic; size-1
-    # axes (and their placeholder links) never do
-    active = [l for Dk, l in zip(axis_dims, axis_links) if Dk > 1] \
-        or list(axis_links)
-    slowest = min(active, key=lambda l: l.bandwidth)
+    slowest = slowest_active_link(axis_dims, axis_links)
     best = Schedule("direct", (p,), (slowest,),
                     predict_direct(p, block_bytes, slowest) + compute_seconds)
     t = predict_factorized(axis_dims, axis_links, block_bytes, p) \

@@ -36,6 +36,7 @@ from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, \
 from repro.core.hlo_inspect import (collective_bytes_by_stride,
                                     loop_aware_analysis, parse_hlo)
 from repro.core.autotune import autotune_stats
+from repro.core.comm import unified_stats
 from repro.core.plan import plan_cache_entries, plan_cache_stats
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, make_serve_step, make_train_step
@@ -283,6 +284,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         # paths never measure).
         "a2a_autotune": {k: v - autotune_before[k]
                          for k, v in autotune_stats().items()},
+        # The TorusComm-unified view of the same state (factorization /
+        # plan / autotune / tuning-DB / comm registries in one dict) —
+        # what a single comm.stats() call reports at serving time.
+        "a2a_comm_stats": unified_stats(),
     }
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
-from repro.core.plan import plan_all_to_all, plan_ragged_all_to_all
+from repro.core.comm import torus_comm
 from repro.kernels import ops as kops
 from repro.models.common import ParamSpec, silu, gelu
 from repro.parallel.sharding import ShardingRules, constrain, ep_axes, \
@@ -88,24 +88,37 @@ def _capacity(cfg: ModelConfig, n_tokens: int, n_slots: int) -> int:
     return min(max(8, -(-c // 8) * 8), hard)  # 8-aligned, then clamped
 
 
+def moe_ep_comm(cfg: ModelConfig, mesh, axes):
+    """The cached Cartesian communicator of the EP group — the API root
+    every MoE collective is constructed through (``core.comm``).  Fetched
+    from the comm registry on every later layer/step, so the torus
+    factorization and device fingerprint resolve once per (devices, EP
+    axes, variant)."""
+    if not axes or mesh is None:
+        return None
+    return torus_comm(mesh, axes, variant=cfg.a2a_variant)
+
+
 def moe_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int):
     """The one A2APlan shared by dispatch and combine for this MoE layer.
 
     Resolved once per (mesh devices, EP axes, block shape, dtype, config
-    knobs) and fetched from the plan registry on every later layer/step —
-    the paper's cached-communicator amortization.  ``cfg.a2a_backend``
+    knobs) through the EP group's :class:`~repro.core.comm.TorusComm` and
+    fetched from the plan registry on every later layer/step — the
+    paper's cached-communicator amortization.  ``cfg.a2a_backend``
     parameterizes plan construction here and nowhere else; with
     ``"autotune"`` the dispatch/combine collective replays the measured
     winner recorded in the tuning DB for exactly this (devices, EP axes,
     block, dtype) key, falling back to the analytic model on a miss — an
     explicit ``core.autotune.autotune(...)`` run warms the DB offline.
     """
-    if not axes or mesh is None:
+    comm = moe_ep_comm(cfg, mesh, axes)
+    if comm is None:
         return None
-    return plan_all_to_all(
-        mesh, axes, block_shape=(E_loc, C, cfg.d_model), dtype=cfg.cdtype,
-        backend=cfg.a2a_backend, variant=cfg.a2a_variant,
-        n_chunks=cfg.a2a_chunks, max_chunks=cfg.a2a_chunks or 4)
+    return comm.all_to_all(
+        block_shape=(E_loc, C, cfg.d_model), dtype=cfg.cdtype,
+        backend=cfg.a2a_backend, n_chunks=cfg.a2a_chunks,
+        max_chunks=cfg.a2a_chunks or 4)
 
 
 def moe_ragged_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int,
@@ -119,19 +132,18 @@ def moe_ragged_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int,
     payload is ``top_k * n_loc / p`` rows — the ratio is the plan's
     occupancy estimate, the quantity dropless mode trades for never
     dropping a token.  Same registry/caching semantics as
-    :func:`moe_a2a_plan`; ``cfg.a2a_backend`` resolves the padded data
-    plan identically.
+    :func:`moe_a2a_plan` (both construct through :func:`moe_ep_comm`);
+    ``cfg.a2a_backend`` resolves the padded data plan identically.
     """
-    if not axes or mesh is None:
+    comm = moe_ep_comm(cfg, mesh, axes)
+    if comm is None:
         return None
     window = E_loc * C
-    p = math.prod(mesh.shape[a] for a in axes)
-    avg = min(float(window), max(1.0, cfg.top_k * n_loc / p))
-    return plan_ragged_all_to_all(
-        mesh, axes, row_shape=(cfg.d_model,), dtype=cfg.cdtype,
+    avg = min(float(window), max(1.0, cfg.top_k * n_loc / comm.p))
+    return comm.ragged_all_to_all(
+        row_shape=(cfg.d_model,), dtype=cfg.cdtype,
         max_count=window, avg_count=avg, backend=cfg.a2a_backend,
-        variant=cfg.a2a_variant, n_chunks=cfg.a2a_chunks,
-        max_chunks=cfg.a2a_chunks or 4)
+        n_chunks=cfg.a2a_chunks, max_chunks=cfg.a2a_chunks or 4)
 
 
 def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,

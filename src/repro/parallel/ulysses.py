@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.comm import torus_comm
 from repro.core.overlap import run_pipelined
-from repro.core.plan import plan_all_to_all
 from repro.kernels import ops as kops
 from repro.parallel.sharding import resolve_spec
 
@@ -73,19 +73,19 @@ def ulysses_attention(q, k, v, cfg, *, causal=True, axes=None, mesh=None,
     hq_loc = Hq // sp
     n_chunks = _overlap_chunks(cfg, Hkv, sp) if kv_a2a else 1
 
-    # One plan per (mesh devices, SP axes, tile shape, dtype), resolved
-    # once and fetched from the registry on every later layer/step.  The
-    # re-shard defaults to the factorized tiled kernel; under
-    # cfg.a2a_backend="autotune" the tuning DB's measured winner for this
-    # tile shape is replayed instead (model fallback on a miss — nothing
-    # here ever blocks on a measurement).  The overlap knob chunks at
-    # KV-head-group granularity above it (run_pipelined).
+    # The SP group's cached Cartesian communicator is the construction
+    # root: one plan per (mesh devices, SP axes, tile shape, dtype),
+    # resolved once through it and fetched from the registry on every
+    # later layer/step.  The re-shard defaults to the factorized tiled
+    # kernel; under cfg.a2a_backend="autotune" the tuning DB's measured
+    # winner for this tile shape is replayed instead (model fallback on a
+    # miss — nothing here ever blocks on a measurement).  The overlap
+    # knob chunks at KV-head-group granularity above it (run_pipelined).
     reshard_backend = "autotune" if cfg.a2a_backend == "autotune" \
         else "factorized"
-    plan = plan_all_to_all(mesh, axes,
-                           block_shape=(B, hq_loc, S // sp, hd),
-                           dtype=q.dtype, backend=reshard_backend,
-                           variant=cfg.a2a_variant)
+    comm = torus_comm(mesh, axes, variant=cfg.a2a_variant)
+    plan = comm.all_to_all(block_shape=(B, hq_loc, S // sp, hd),
+                           dtype=q.dtype, backend=reshard_backend)
 
     def inner_overlap(ql, kl, vl):
         # Chunked seq<->heads re-shard (core.overlap): split the heads

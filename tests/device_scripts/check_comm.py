@@ -1,0 +1,244 @@
+"""TorusComm acceptance suite (12 CPU devices).
+
+Asserts the communicator redesign end to end:
+
+* ``comm.sub(axes)`` plans are the *identical cached objects* top-level
+  comms over the same axes resolve, and execute bit-exactly (the paper's
+  dimension-wise split, recursive).
+* ``comm.all_gather`` / ``comm.reduce_scatter`` — the new dimension-wise
+  gather family — are bit-exact with the ``core.simulator`` oracles and
+  with the direct product-communicator collectives, across round orders
+  and chunk counts (int payloads: the d-stage reduce association order is
+  exact there).  The oracles themselves are pinned to the paper's 5x4 and
+  2x3x4 tori (device-free, so they run here too).
+* ``torus_comm(p, d=...)`` is the MPI_Dims_create + MPI_Cart_create path:
+  it builds the Cartesian mesh itself.
+* ``comm.stats()`` unifies factorization / plan / autotune / tuning-DB
+  state in one call, and ``comm.free()`` drops the comm's plan slice.
+
+Exits nonzero on any failure.
+"""
+
+import itertools
+import math
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cache import cart_create
+from repro.core.comm import free_comms, torus_comm
+from repro.core.plan import free_plans, plan_cache_stats
+from repro.core.simulator import (
+    simulate_factorized_allgather,
+    simulate_factorized_reduce_scatter,
+)
+
+DIMS = [((3, 4), ("i", "j")), ((2, 3, 2), ("i", "j", "k"))]
+PAPER_TORI = [(5, 4), (2, 3, 4)]
+
+
+def _jit(mesh, names, loc, extra_none=0):
+    spec = P(tuple(reversed(names)), *([None] * extra_none))
+    return jax.jit(jax.shard_map(loc, mesh=mesh, in_specs=spec,
+                                 out_specs=spec))
+
+
+def check_paper_tori_oracles():
+    """The oracle pins on the paper's worked tori (device-free)."""
+    for dims in PAPER_TORI:
+        p = math.prod(dims)
+        for order in itertools.permutations(range(len(dims))):
+            out, vol = simulate_factorized_allgather(dims, order)
+            assert all(out[r] == list(range(p)) for r in range(p)), \
+                (dims, order)
+            assert vol.total_blocks_sent == p - 1
+            out, vol = simulate_factorized_reduce_scatter(dims, order)
+            assert all(out[r] == [(s, r) for s in range(p)]
+                       for r in range(p)), (dims, order)
+            assert vol.total_blocks_sent == p - 1
+    print(f"OK simulator oracles on the paper tori {PAPER_TORI}")
+
+
+def check_allgather(dims, names, backend, order, n_chunks):
+    p = math.prod(dims)
+    mesh = cart_create(p, dims, names)
+    comm = torus_comm(mesh, names)
+    plan = comm.all_gather((2, 3), jnp.int32, backend=backend,
+                           round_order=order, n_chunks=n_chunks)
+    # x[r] = rank r's contribution block
+    x = (jnp.arange(p)[:, None, None] * 100
+         + jnp.arange(6).reshape(2, 3)).astype(jnp.int32)
+    f = _jit(mesh, names, lambda xl: plan.forward(xl[0])[None],
+             extra_none=2)
+    got = np.array(f(x))            # (p, p, 2, 3): got[r] = gathered buffer
+    oracle, _ = simulate_factorized_allgather(
+        dims, order if backend != "direct" else None)
+    xs = np.array(x)
+    for r in range(p):
+        want = np.stack([xs[src] for src in oracle[r]])
+        np.testing.assert_array_equal(got[r], want)
+
+
+def check_reduce_scatter(dims, names, backend, order, n_chunks):
+    p = math.prod(dims)
+    mesh = cart_create(p, dims, names)
+    comm = torus_comm(mesh, names)
+    plan = comm.reduce_scatter((5,), jnp.int32, backend=backend,
+                               round_order=order, n_chunks=n_chunks)
+    # x[r, i] = rank r's term for rank i's reduction
+    x = (jnp.arange(p)[:, None, None] * 1000 + jnp.arange(p)[None, :, None]
+         * 10 + jnp.arange(5)).astype(jnp.int32)
+    f = _jit(mesh, names, lambda xl: plan.forward(xl[0])[None],
+             extra_none=1)
+    got = np.array(f(x))            # (p, 5): got[r] = sum_s x[s, r]
+    oracle, _ = simulate_factorized_reduce_scatter(
+        dims, order if backend != "direct" else None)
+    xs = np.array(x)
+    for r in range(p):
+        assert oracle[r] == [(s, r) for s in range(p)]
+        want = sum(xs[s, r] for s, _t in oracle[r])
+        np.testing.assert_array_equal(got[r], want)
+
+
+def check_sub_comm_parity():
+    mesh = cart_create(12, (2, 3, 2), ("i", "j", "k"))
+    comm = torus_comm(mesh, ("i", "j", "k"))
+    sub = comm.sub(("i", "j"))
+    assert sub.dims == (2, 3) and sub.parent is comm
+    assert sub.describe()["parent"] == ["i", "j", "k"]
+    top = torus_comm(mesh, ("i", "j"))
+    p_sub = sub.all_to_all((4,), jnp.float32, backend="factorized")
+    p_top = top.all_to_all((4,), jnp.float32, backend="factorized")
+    assert p_sub is p_top, "sub-comm plan is not the shared cached object"
+
+    # recursive split: sub of sub
+    leaf = sub.sub(("i",))
+    assert leaf.dims == (2,) and leaf.parent is sub
+    assert leaf.describe()["parent"] == ["i", "j"]
+    l_top = torus_comm(mesh, ("i",))
+    assert leaf.all_to_all((4,), jnp.float32, backend="direct") is \
+        l_top.all_to_all((4,), jnp.float32, backend="direct")
+
+    # gather-family plans built through a sub-comm record their lineage
+    ag = sub.all_gather((2,), jnp.int32, backend="factorized")
+    assert ag.describe()["parent"] == ["i", "j", "k"]
+    print("OK sub-comm plans == top-level plans (shared registry, "
+          "recursive split)")
+
+
+def check_sub_comm_execution():
+    """Bit-exactness of a sub-comm all-to-all against the full-comm one
+    restricted to the same axes, on a genuinely asymmetric operand."""
+    mesh = cart_create(12, (2, 3, 2), ("i", "j", "k"))
+    comm = torus_comm(mesh, ("i", "j", "k"))
+    sub = comm.sub(("i", "j"))
+    top = torus_comm(mesh, ("i", "j"))
+    sp = 6
+    x = jax.random.normal(jax.random.PRNGKey(0), (sp, sp, 3))
+
+    outs = []
+    for plan in (sub.all_to_all((3,), x.dtype, backend="factorized"),
+                 top.all_to_all((3,), x.dtype, backend="factorized"),
+                 top.all_to_all((3,), x.dtype, backend="direct")):
+        f = jax.jit(jax.shard_map(
+            lambda xl: plan.forward(xl[0])[None], mesh=mesh,
+            in_specs=P(("j", "i"), None, None),
+            out_specs=P(("j", "i"), None, None)))
+        outs.append(np.array(f(x)))
+    np.testing.assert_array_equal(outs[0], outs[2])
+    np.testing.assert_array_equal(outs[1], outs[2])
+    expected = np.array(x).transpose(1, 0, 2)
+    np.testing.assert_array_equal(outs[0], expected)
+    print("OK sub-comm execution bit-exact with top-level (and direct)")
+
+
+def check_dims_create_path():
+    comm = torus_comm(12, d=2)
+    assert comm.mesh is not None and comm.p == 12
+    assert sorted(comm.dims) == [3, 4]
+    plan = comm.all_gather((2,), jnp.int32, backend="factorized")
+    x = (jnp.arange(12)[:, None] * 7 + jnp.arange(2)).astype(jnp.int32)
+    got = np.array(plan.host_fn()(x))
+    for r in range(12):
+        np.testing.assert_array_equal(got[r], np.array(x))
+    print("OK torus_comm(p, d=2) dims_create/cart_create path")
+
+
+def check_stats_and_free():
+    mesh = cart_create(12, (3, 4), ("i", "j"))
+    comm = torus_comm(mesh, ("i", "j"), variant="paper")
+    comm.all_to_all((4,), jnp.float32, backend="factorized")
+    comm.ragged_all_to_all((2,), jnp.float32, max_count=3)
+    comm.reduce_scatter((4,), jnp.int32, backend="direct")
+    s = comm.stats()
+    for section in ("factorization", "plans", "autotune", "tuning_db",
+                    "comms", "comm"):
+        assert section in s, f"stats() missing {section}"
+    assert s["comm"]["plans_live"] == 3
+    assert s["plans"]["size"] >= 4      # ragged plan carries nested entries
+    assert {"hits", "misses", "size"} <= set(s["plans"])
+    assert {"cart_creates", "lookups", "size"} <= set(s["factorization"])
+    assert {"db_hits", "db_misses", "timing_executions"} <= \
+        set(s["autotune"])
+    import json
+    json.dumps(s)
+
+    before = plan_cache_stats()["size"]
+    comm.free()
+    after = plan_cache_stats()["size"]
+    assert after <= before - 4, (before, after)   # ragged dropped nested too
+    assert comm.stats()["comm"]["freed"]
+    print(f"OK unified stats + free(): plan registry {before} -> {after}")
+
+
+def main():
+    assert jax.device_count() >= 12, \
+        f"need 12 devices, got {jax.device_count()}"
+    free_plans()
+    free_comms()
+
+    check_paper_tori_oracles()
+
+    n = 0
+    for dims, names in DIMS:
+        d = len(dims)
+        for backend in ("factorized", "direct"):
+            orders = list(itertools.permutations(range(d))) \
+                if backend == "factorized" else [None]
+            for order in orders:
+                for n_chunks in (1, 3):
+                    check_allgather(dims, names, backend, order, n_chunks)
+                    n += 1
+    print(f"OK all-gather == simulator oracle ({n} cases, direct + "
+          f"factorized bit-exact)")
+
+    n = 0
+    for dims, names in DIMS:
+        d = len(dims)
+        for backend in ("factorized", "direct"):
+            orders = list(itertools.permutations(range(d))) \
+                if backend == "factorized" else [None]
+            for order in orders:
+                for n_chunks in (1, 2):
+                    check_reduce_scatter(dims, names, backend, order,
+                                         n_chunks)
+                    n += 1
+    print(f"OK reduce-scatter == simulator oracle ({n} cases, direct + "
+          f"factorized bit-exact)")
+
+    check_sub_comm_parity()
+    check_sub_comm_execution()
+    check_dims_create_path()
+    check_stats_and_free()
+
+    stats = plan_cache_stats()
+    assert stats["hits"] > 0, f"plan registry never hit: {stats}"
+    print(f"OK comm plan registry amortizes: {stats}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,25 +19,25 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cache import cart_create
-from repro.core.plan import plan_all_to_all
+from repro.core.comm import torus_comm
 
 
 def run_case(dims, names, variant, block=(3,), round_order=None, pipelined=0,
              dtype=jnp.float32):
     p = math.prod(dims)
     mesh = cart_create(p, dims, names)
+    comm = torus_comm(mesh, names, variant=variant)
     spec = P(tuple(reversed(names)))
     x = (jnp.arange(p)[:, None] * 1000 + jnp.arange(p)[None, :])
     x = (x[..., None] * jnp.ones(block)).astype(dtype)
 
     if pipelined:
-        plan = plan_all_to_all(mesh, names, block, dtype,
-                               backend="pipelined", n_chunks=pipelined)
+        plan = comm.all_to_all(block, dtype, backend="pipelined",
+                               n_chunks=pipelined)
     else:
-        plan = plan_all_to_all(mesh, names, block, dtype,
-                               backend="factorized", variant=variant,
+        plan = comm.all_to_all(block, dtype, backend="factorized",
                                round_order=round_order)
-    plan_dir = plan_all_to_all(mesh, names, block, dtype, backend="direct")
+    plan_dir = comm.all_to_all(block, dtype, backend="direct")
 
     def loc(xl):
         return plan.forward(xl[0])[None]
@@ -60,8 +60,9 @@ def run_tiled(dims, names, shape, split, concat):
     spec = P(tuple(reversed(names)), *([None] * (len(shape) - 1)))
     x = jax.random.normal(jax.random.PRNGKey(0), (p,) + shape)
 
-    plan = plan_all_to_all(mesh, names, backend="factorized")
-    plan_dir = plan_all_to_all(mesh, names, backend="direct")
+    comm = torus_comm(mesh, names)
+    plan = comm.all_to_all(backend="factorized")
+    plan_dir = comm.all_to_all(backend="direct")
 
     def loc(xl):
         return plan.tiled(xl[0], split, concat)[None]

@@ -28,8 +28,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.cache import cart_create
-from repro.core.plan import free_plans, plan_all_to_all, \
-    plan_ragged_all_to_all
+from repro.core.comm import torus_comm
+from repro.core.plan import free_plans
 from repro.core.simulator import simulate_direct_alltoallv, \
     simulate_factorized_alltoallv
 from repro.models.common import init_params
@@ -62,9 +62,9 @@ def run_bucketed_vs_oracle(dims, names, variant, order, max_count=5,
     p = math.prod(dims)
     mesh = cart_create(p, tuple(reversed(dims)), names)
     counts = _counts(p, max_count, seed)
-    plan = plan_ragged_all_to_all(mesh, names, (2,), "float32",
-                                  max_count=max_count, variant=variant,
-                                  round_order=order, backend="factorized")
+    plan = torus_comm(mesh, names, variant=variant).ragged_all_to_all(
+        (2,), "float32", max_count=max_count, round_order=order,
+        backend="factorized")
     x = _payload(counts, plan.bucket, (2,), seed)
     recv, rc = plan.host_fn()(jnp.asarray(x), jnp.asarray(counts))
     recv, rc = np.array(recv), np.array(rc)
@@ -119,9 +119,9 @@ def _reverse_host(plan, mesh):
 def run_exact_vs_oracle(dims, order=None, max_count=4, seed=1):
     p = math.prod(dims)
     names = tuple(f"t{i}" for i in range(len(dims)))
-    plan = plan_ragged_all_to_all(dims, names, (3,), "float32",
-                                  max_count=max_count,
-                                  round_order=order, backend="factorized")
+    plan = torus_comm(dims, names).ragged_all_to_all(
+        (3,), "float32", max_count=max_count, round_order=order,
+        backend="factorized")
     counts = _counts(p, max_count, seed)
     rng = np.random.default_rng(seed + 100)
     rows = [[rng.standard_normal((int(counts[s, t]), 3)).astype(np.float32)
@@ -143,15 +143,15 @@ def run_uniform_equals_dense(dims, names, backend, seed=3):
     blocks — the issue's uniform-counts property, executed."""
     p = math.prod(dims)
     mesh = cart_create(p, tuple(reversed(dims)), names)
-    plan = plan_ragged_all_to_all(mesh, names, (2,), "float32",
-                                  max_count=8, backend=backend)
+    comm = torus_comm(mesh, names)
+    plan = comm.ragged_all_to_all((2,), "float32", max_count=8,
+                                  backend=backend)
     rng = np.random.default_rng(seed)
     x = rng.standard_normal((p, p, plan.bucket, 2)).astype(np.float32)
     counts = np.full((p, p), 8, np.int32)
     recv, rc = plan.host_fn()(jnp.asarray(x), jnp.asarray(counts))
 
-    dense = plan_all_to_all(mesh, names, (plan.bucket, 2), "float32",
-                            backend=backend)
+    dense = comm.all_to_all((plan.bucket, 2), "float32", backend=backend)
     ref = np.array(dense.host_fn()(jnp.asarray(x)))
     np.testing.assert_array_equal(np.array(recv), ref)
     np.testing.assert_array_equal(np.array(rc), counts.T)

@@ -22,16 +22,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cache import cart_create
+from repro.core.comm import torus_comm
 from repro.core.hlo_inspect import parse_hlo
-from repro.core.plan import plan_all_to_all
 
 
 def compile_report(dims, names, variant, block=64):
     p = math.prod(dims)
     mesh = cart_create(p, dims, names)
     spec = P(tuple(reversed(names)))
-    plan = plan_all_to_all(mesh, names, (block,), jnp.float32,
-                           backend="factorized", variant=variant)
+    plan = torus_comm(mesh, names, variant=variant).all_to_all(
+        (block,), jnp.float32, backend="factorized")
 
     def loc(xl):
         return plan.forward(xl[0])[None]

@@ -1,0 +1,330 @@
+"""Device-free unit tests for the TorusComm API root (core.comm):
+communicator construction/caching, the recursive dimension-wise split,
+collective factories (incl. the new all-gather / reduce-scatter family),
+describe() goldens, unified stats, and lifecycle.
+
+Multi-device execution parity (sub-comm vs top-level, gather family vs
+the simulator oracles) runs in ``tests/device_scripts/check_comm.py``
+(see test_multidevice.py).
+"""
+
+import json
+
+import pytest
+
+from repro.core import cache as core_cache
+from repro.core import comm as core_comm
+from repro.core import plan as core_plan
+from repro.core.cache import cart_create, free_all, set_cache_capacity
+from repro.core.comm import (
+    AllGatherPlan,
+    ReduceScatterPlan,
+    free_comms,
+    torus_comm,
+    unified_stats,
+)
+from repro.core.plan import (
+    A2APlan,
+    RaggedA2APlan,
+    free_plans,
+    plan_all_to_all,
+    plan_cache_stats,
+    plan_ragged_all_to_all,
+    set_plan_cache_capacity,
+)
+from repro.core.tuning import DCN, ICI, choose_dimwise_algorithm
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registries():
+    free_comms()
+    free_plans()
+    free_all()
+    core_plan._PLANS.stats.update(hits=0, misses=0, evictions=0)
+    core_cache._REGISTRY.stats.update(hits=0, misses=0, evictions=0)
+    core_comm._COMMS.stats.update(hits=0, misses=0, evictions=0)
+    old_plan_cap = core_plan._PLANS.capacity
+    old_fact_cap = core_cache._REGISTRY.capacity
+    yield
+    set_plan_cache_capacity(old_plan_cap)
+    set_cache_capacity(old_fact_cap)
+    free_comms()
+    free_plans()
+    free_all()
+
+
+class TestConstruction:
+    def test_dims_path_identity(self):
+        a = torus_comm((2, 3), ("i", "j"))
+        b = torus_comm((2, 3), ("i", "j"))
+        assert a is b
+        assert a.dims == (2, 3) and a.axis_names == ("i", "j")
+        assert a.p == 6 and a.d == 2 and a.mesh is None
+
+    def test_variant_separates_comms(self):
+        a = torus_comm((2, 2), ("i", "j"))
+        b = torus_comm((2, 2), ("i", "j"), variant="paper")
+        assert a is not b and b.variant == "paper"
+
+    def test_mesh_path_keyed_by_fingerprint(self):
+        m1 = cart_create(1, (1,), ("x",))
+        m2 = cart_create(1, (1,), ("x",))   # rebuilt mesh, same devices
+        assert torus_comm(m1, ("x",)) is torus_comm(m2, ("x",))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="dims for"):
+            torus_comm((2, 3, 4), ("i", "j"))
+        with pytest.raises(ValueError, match="axis_names or d"):
+            torus_comm(cart_create(1, (1,), ("x",)))
+        with pytest.raises(ValueError, match="needs d"):
+            torus_comm(6)
+
+    def test_context_manager_frees(self):
+        with torus_comm((2, 2), ("i", "j"), variant="paper") as comm:
+            comm.all_to_all((4,), "float32", backend="direct")
+            assert plan_cache_stats()["size"] == 1
+        assert comm._freed
+        assert plan_cache_stats()["size"] == 0
+
+
+class TestSub:
+    def test_split_and_recursion(self):
+        comm = torus_comm((2, 3, 4), ("i", "j", "k"))
+        sub = comm.sub(("i", "k"))
+        assert sub.dims == (2, 4) and sub.parent is comm
+        assert comm.sub(("i", "k")) is sub
+        leaf = sub.sub(("k",))
+        assert leaf.dims == (4,) and leaf.parent is sub
+
+    def test_validation(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        with pytest.raises(ValueError, match="not in communicator"):
+            comm.sub(("z",))
+        with pytest.raises(ValueError, match="duplicate"):
+            comm.sub(("i", "i"))
+
+    def test_same_axes_children_of_different_parents_are_distinct(self):
+        # Two parents over different tori split into same-axes children:
+        # those must be distinct comms with the right lineage, and one
+        # parent's free() must not tear down the other's child.
+        c1 = torus_comm((2, 3), ("i", "j"))
+        c2 = torus_comm((2, 4), ("i", "j"))
+        s1, s2 = c1.sub(("i",)), c2.sub(("i",))
+        assert s1 is not s2
+        assert s1.parent is c1 and s2.parent is c2
+        c1.free()
+        assert not s2._freed and c2.sub(("i",)) is s2
+
+    def test_describe_golden(self):
+        comm = torus_comm((4, 2), ("i", "j"))
+        sub = comm.sub(("j",))
+        sub.all_to_all((4,), "float32", backend="direct")
+        assert sub.describe() == {
+            "kind": "comm",
+            "axes": ["j"],
+            "dims": [2],
+            "p": 2,
+            "d": 1,
+            "variant": "natural",
+            "parent": ["i", "j"],
+            "device_backed": False,
+            "plans": 1,
+            "subs": [],
+        }
+        d = comm.describe()
+        assert d["parent"] is None and d["subs"] == [["j"]]
+        json.dumps(d)
+
+    def test_sub_plans_are_top_level_plans(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        sub = comm.sub(("i",))
+        top = torus_comm((2,), ("i",))
+        a = sub.all_to_all((8,), "float32", backend="factorized")
+        b = top.all_to_all((8,), "float32", backend="factorized")
+        assert a is b
+        r1 = sub.ragged_all_to_all((2,), "float32", max_count=3)
+        r2 = top.ragged_all_to_all((2,), "float32", max_count=3)
+        assert r1 is r2
+
+
+class TestCollectiveFactories:
+    def test_all_to_all_matches_delegator(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        a = comm.all_to_all((8,), "float32", backend="factorized")
+        b = plan_all_to_all((2, 3), ("i", "j"), (8,), "float32",
+                            backend="factorized")
+        assert isinstance(a, A2APlan) and a is b
+
+    def test_ragged_matches_delegator(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        a = comm.ragged_all_to_all((4,), "float32", max_count=5)
+        b = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=5)
+        assert isinstance(a, RaggedA2APlan) and a is b
+
+    def test_gather_family_cached(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        ag = comm.all_gather((4,), "int32", backend="factorized")
+        assert isinstance(ag, AllGatherPlan)
+        assert comm.all_gather((4,), "int32", backend="factorized") is ag
+        assert ag.describe()["cache"] == "hit"
+        rs = comm.reduce_scatter((4,), "int32", backend="direct")
+        assert isinstance(rs, ReduceScatterPlan)
+        assert rs is not ag
+
+    def test_gather_backend_validation(self):
+        comm = torus_comm((2, 2), ("i", "j"))
+        with pytest.raises(ValueError, match="backend"):
+            comm.all_gather((4,), "int32", backend="overlap")
+        with pytest.raises(ValueError, match="tuned"):
+            comm.reduce_scatter(backend="tuned")
+        with pytest.raises(ValueError, match="permutation"):
+            comm.all_gather((4,), "int32", backend="factorized",
+                            round_order=(0, 0))
+
+
+class TestGatherDescribeGoldens:
+    def test_allgather_golden(self):
+        comm = torus_comm((4, 2), ("i", "j"))
+        plan = comm.all_gather((16, 8), "bfloat16", backend="factorized",
+                               round_order=(1, 0), n_chunks=3,
+                               links=(ICI, DCN))
+        d = plan.describe()
+        pred = d.pop("predicted_seconds")
+        assert pred > 0
+        assert d == {
+            "kind": "allgather",
+            "axes": ["i", "j"],
+            "dims": [4, 2],
+            "p": 8,
+            "d": 2,
+            "backend": "factorized",
+            "requested_backend": "factorized",
+            "variant": "natural",
+            "round_order": [1, 0],
+            "n_chunks": 3,
+            "block_shape": [16, 8],
+            "dtype": "bfloat16",
+            "block_bytes": 256,
+            "links": [{"alpha": ICI.alpha, "bandwidth": ICI.bandwidth},
+                      {"alpha": DCN.alpha, "bandwidth": DCN.bandwidth}],
+            "tuned_from": None,
+            "parent": None,
+            "cache": "miss",
+        }
+        json.dumps(plan.describe())
+
+    def test_reduce_scatter_golden_via_sub(self):
+        comm = torus_comm((4, 2), ("i", "j"))
+        plan = comm.sub(("i",)).reduce_scatter((8,), "float32",
+                                               backend="direct")
+        d = plan.describe()
+        assert d["kind"] == "reduce_scatter"
+        assert d["axes"] == ["i"]
+        assert d["parent"] == ["i", "j"]
+        assert d["tuned_from"] is None
+        assert d["backend"] == "direct"
+        assert d["predicted_seconds"] > 0
+        json.dumps(d)
+
+    def test_predictors_price_active_stages_with_trivial_dims(self):
+        # round_order permutes the ACTIVE stages (the kernel/plan
+        # convention): with a trivial dim present both size-4 stages
+        # must be priced, under either permutation.
+        from repro.core.tuning import predict_allgather, \
+            predict_reduce_scatter
+
+        for predict in (predict_allgather, predict_reduce_scatter):
+            t_id = predict((1, 4, 4), ICI, 1024.0, 16, round_order=(0, 1))
+            t_rev = predict((1, 4, 4), ICI, 1024.0, 16, round_order=(1, 0))
+            t_flat = predict((4, 4), (ICI, ICI), 1024.0, 16)
+            assert t_id == pytest.approx(t_rev)   # uniform links commute
+            assert t_id == pytest.approx(t_flat)  # trivial dim is free
+            with pytest.raises(ValueError, match="permutation"):
+                predict((1, 4, 4), ICI, 1024.0, 16, round_order=(0, 1, 2))
+
+    def test_tuned_matches_choose_dimwise_algorithm(self):
+        dims, links = (16, 4), (ICI, DCN)
+        for kind, method in (("allgather", "all_gather"),
+                             ("reduce_scatter", "reduce_scatter")):
+            for bytes_ in (4, 1 << 16, 1 << 24):
+                comm = torus_comm(dims, ("i", "j"))
+                plan = getattr(comm, method)((bytes_,), "int8",
+                                             backend="tuned", links=links)
+                sched = choose_dimwise_algorithm(kind, dims, links,
+                                                 float(bytes_))
+                assert plan.backend == sched.kind
+                assert plan.tuned_from == "model"
+                assert plan.describe()["predicted_seconds"] == \
+                    pytest.approx(sched.predicted_seconds)
+
+
+class TestStatsAndLifecycle:
+    def test_unified_stats_sections(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        comm.all_to_all((4,), "float32", backend="direct")
+        s = comm.stats()
+        assert set(s) == {"factorization", "plans", "autotune",
+                          "tuning_db", "comms", "comm"}
+        assert s["plans"]["size"] == 1
+        assert s["comm"]["plans_live"] == 1
+        assert {"path", "generation"} <= set(s["tuning_db"])
+        json.dumps(s)
+        # the module-level form (what dryrun records) has no comm section
+        assert "comm" not in unified_stats()
+
+    def test_free_drops_plan_slice_and_recurses(self):
+        comm = torus_comm((2, 3), ("i", "j"), variant="paper")
+        comm.all_to_all((4,), "float32", backend="direct")
+        comm.sub(("i",)).all_gather((2,), "int32", backend="factorized")
+        comm.ragged_all_to_all((2,), "float32", max_count=3)
+        assert plan_cache_stats()["size"] == 5   # dense+ag+ragged+nested(2)
+        comm.free()
+        assert plan_cache_stats()["size"] == 0
+        # a fresh lookup builds a new communicator, not the freed one
+        again = torus_comm((2, 3), ("i", "j"), variant="paper")
+        assert again is not comm and not again._freed
+
+    def test_free_is_idempotent(self):
+        comm = torus_comm((2, 2), ("i", "j"), variant="paper")
+        comm.free()
+        comm.free()
+        assert comm.stats()["comm"]["freed"]
+
+    def test_stale_free_does_not_evict_successor(self):
+        c1 = torus_comm((2, 2), ("i", "j"), variant="paper")
+        c1.free()
+        c2 = torus_comm((2, 2), ("i", "j"), variant="paper")
+        c1.free()   # stale second free must not retire c2's entry
+        assert torus_comm((2, 2), ("i", "j"), variant="paper") is c2
+
+    def test_db_handle_is_part_of_comm_identity(self):
+        from repro.core.autotune import TuningDB
+
+        default = torus_comm((2, 2), ("i", "j"))
+        custom = torus_comm((2, 2), ("i", "j"),
+                            db=TuningDB("/tmp/repro-test-tuning.json"))
+        # a custom-DB comm must neither reuse nor shadow the default one
+        assert custom is not default and custom._db is not None
+        assert torus_comm((2, 2), ("i", "j")) is default
+        assert custom.sub(("i",))._db is custom._db
+
+    def test_single_linkmodel_broadcasts_in_every_family(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        assert comm.all_to_all((4,), "float32", backend="factorized",
+                               links=ICI).links == (ICI, ICI)
+        assert comm.all_gather((4,), "int32", backend="factorized",
+                               links=ICI).links == (ICI, ICI)
+        assert comm.ragged_all_to_all((2,), "float32", max_count=3,
+                                      links=DCN).data.links == (DCN, DCN)
+
+
+class TestDelegatorsUseImplicitComm:
+    def test_plan_all_to_all_builds_comm_entry(self):
+        plan_all_to_all((2, 3), ("i", "j"), (8,), "float32",
+                        backend="direct")
+        assert len(core_comm._COMMS) == 1
+        # and the same plan key hits through either spelling
+        comm = torus_comm((2, 3), ("i", "j"))
+        p = comm.all_to_all((8,), "float32", backend="direct")
+        assert p.describe()["cache"] == "hit"

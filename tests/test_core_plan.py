@@ -309,6 +309,69 @@ class TestPlanRegistry:
         assert plan_cache_stats()["size"] == 0
 
 
+class TestPlanTeardownSymmetry:
+    """The registry delete-callback fix: evicting (or dropping) a
+    composite plan tears down its nested dense entries and releases the
+    factorization refs it pinned, keeping plan and factorization cache
+    stats balanced."""
+
+    def test_evicting_ragged_plan_drops_nested_entries(self):
+        from repro.core.plan import plan_ragged_all_to_all
+
+        r = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=5)
+        assert plan_cache_stats()["size"] == 3   # ragged + data + counts
+        # refresh the nested plans' recency so the composite is the LRU
+        # victim, then squeeze: evicting it must drop both nested entries
+        core_plan._PLANS.get(r.data._registry_key)
+        core_plan._PLANS.get(r.counts_plan._registry_key)
+        set_plan_cache_capacity(3)
+        plan_all_to_all((5,), ("z",), (4,), "float32", backend="direct")
+        assert r._registry_key not in core_plan._PLANS
+        assert r.data._registry_key not in core_plan._PLANS
+        assert r.counts_plan._registry_key not in core_plan._PLANS
+        assert plan_cache_stats()["size"] == 1   # only the flooding plan
+
+    def test_shared_counts_plan_survives_sibling_eviction(self):
+        from repro.core.plan import plan_ragged_all_to_all
+
+        a = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=5)
+        b = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=9)
+        assert a.counts_plan is b.counts_plan
+        core_plan._drop_plan(a._registry_key)
+        # a's private data plan went with it; the shared counts plan is
+        # still owned by the live sibling and must stay
+        assert a.data._registry_key not in core_plan._PLANS
+        assert b.counts_plan._registry_key in core_plan._PLANS
+        assert b._registry_key in core_plan._PLANS
+        assert b.data._registry_key in core_plan._PLANS
+
+    def test_eviction_releases_factorization_refs(self):
+        mesh = cart_create(1, (1,), ("x",))
+        base = cache_stats()["size"]
+        plan = plan_all_to_all(mesh, ("x",), (4,), "float32",
+                               backend="direct")
+        assert cache_stats()["size"] == base + 1
+        core_plan._drop_plan(plan._registry_key)
+        # last plan over the descriptor: the registry entry is released
+        assert cache_stats()["size"] == base
+
+    def test_free_plans_leaves_stats_balanced(self):
+        from repro.core.plan import plan_ragged_all_to_all
+
+        mesh = cart_create(1, (1,), ("x",))
+        base = cache_stats()["size"]
+        plan_ragged_all_to_all(mesh, ("x",), (4,), "float32", max_count=3)
+        plan_all_to_all(mesh, ("x",), (8,), "float32", backend="direct")
+        assert plan_cache_stats()["size"] == 4
+        assert cache_stats()["size"] == base + 1
+        free_plans()
+        assert plan_cache_stats()["size"] == 0
+        assert cache_stats()["size"] == base
+
+
 class TestFactorizationCacheBounded:
     def test_mesh_rebuilds_do_not_grow_cache(self):
         # The satellite regression: a serving loop that rebuilds its Mesh

@@ -80,6 +80,48 @@ class TestPlanProperties:
         assert again is plan and again.describe()["cache"] == "hit"
 
 
+class TestCommProperties:
+    """The TorusComm split invariant: a sub-communicator's plans are the
+    *identical cached objects* a top-level comm over the same axes
+    resolves — bit-exactness with top-level plans by construction (the
+    executed form is device-tested in check_comm.py)."""
+
+    @given(st.lists(st.integers(1, 5), min_size=1, max_size=4),
+           st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_sub_comm_plans_are_top_level_plans(self, dims, data):
+        from repro.core.comm import free_comms, torus_comm
+        from repro.core.plan import free_plans
+
+        dims = tuple(dims)
+        names = tuple(f"a{i}" for i in range(len(dims)))
+        free_comms()
+        free_plans()
+        comm = torus_comm(dims, names)
+        idx = sorted(data.draw(st.sets(
+            st.integers(0, len(dims) - 1), min_size=1)))
+        axes = tuple(names[i] for i in idx)
+        sub = comm.sub(axes)
+        assert sub.dims == tuple(dims[i] for i in idx)
+        assert sub.parent is comm
+        top = torus_comm(sub.dims, axes)
+        for build in (
+            lambda c: c.all_to_all((4,), "float32", backend="factorized"),
+            lambda c: c.ragged_all_to_all((2,), "float32", max_count=3),
+            lambda c: c.all_gather((4,), "int32", backend="factorized"),
+            lambda c: c.reduce_scatter((4,), "int32", backend="direct"),
+        ):
+            p_sub, p_top = build(sub), build(top)
+            # gather-family plans key on the sub-comm lineage; the plan
+            # family proper is shared object-for-object
+            if getattr(p_sub, "parent", None) is None:
+                assert p_sub is p_top
+            else:
+                assert p_sub.backend == p_top.backend
+                assert p_sub.dims == p_top.dims
+                assert p_sub.order == p_top.order
+
+
 class TestRaggedProperties:
     """The ragged (Alltoallv) subsystem: oracle correctness over random
     factorizations x random count matrices, the uniform-counts

@@ -18,8 +18,10 @@ from repro.core.simulator import (
     example_index_table,
     round_datatype,
     simulate_direct_alltoallv,
+    simulate_factorized_allgather,
     simulate_factorized_alltoall,
     simulate_factorized_alltoallv,
+    simulate_factorized_reduce_scatter,
     strides,
 )
 
@@ -225,3 +227,49 @@ class TestExactAlltoallv:
         from repro.core.ragged import exact_alltoallv
         with pytest.raises(ValueError, match="nested list"):
             exact_alltoallv([[np.zeros((1,))]], (2,))
+
+
+class TestDimwiseGatherOracles:
+    """The TorusComm gather family's oracles, pinned to the paper's
+    worked tori (5x4, 2x3x4): d-stage all-gather ends rank-ordered,
+    d-stage reduce-scatter ends fully reduced, and both move exactly
+    p - 1 blocks per rank for any round order (the telescoping volume —
+    unlike Theorem 1's all-to-all, the gathers have no combining win,
+    only the message-count one)."""
+
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4)])
+    def test_allgather_paper_tori(self, dims):
+        import itertools
+        p = math.prod(dims)
+        for order in itertools.permutations(range(len(dims))):
+            out, vol = simulate_factorized_allgather(dims, order)
+            assert all(out[r] == list(range(p)) for r in range(p))
+            assert vol.total_blocks_sent == p - 1
+
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4)])
+    def test_reduce_scatter_paper_tori(self, dims):
+        import itertools
+        p = math.prod(dims)
+        for order in itertools.permutations(range(len(dims))):
+            out, vol = simulate_factorized_reduce_scatter(dims, order)
+            assert all(out[r] == [(s, r) for s in range(p)]
+                       for r in range(p))
+            assert vol.total_blocks_sent == p - 1
+
+    def test_trivial_and_deep_factorizations(self):
+        for dims in [(1,), (2,), (1, 3), (2, 2, 2, 2)]:
+            p = math.prod(dims)
+            out, _ = simulate_factorized_allgather(dims)
+            assert all(out[r] == list(range(p)) for r in range(p))
+            out, _ = simulate_factorized_reduce_scatter(dims)
+            assert all(out[r] == [(s, r) for s in range(p)]
+                       for r in range(p))
+
+    def test_stage_volumes_follow_the_held_payload(self):
+        # all-gather grows: (D0-1)*1, (D1-1)*D0, ...; reduce-scatter
+        # shrinks: p(D0-1)/D0, (p/D0)(D1-1)/D1, ...
+        _, vol = simulate_factorized_allgather((2, 3, 4))
+        assert vol.blocks_sent_per_round == [1, 2 * 2, 3 * 6]
+        _, vol = simulate_factorized_reduce_scatter((2, 3, 4))
+        assert vol.blocks_sent_per_round == [24 // 2, 12 * 2 // 3,
+                                             4 * 3 // 4]

@@ -60,6 +60,24 @@ def test_ragged_alltoallv_12dev():
 
 
 @pytest.mark.slow
+def test_torus_comm_12dev():
+    # TorusComm acceptance: sub-comm plans are the shared cached objects
+    # and execute bit-exactly; the new all-gather / reduce-scatter family
+    # matches the simulator oracles (pinned to the paper's 5x4 / 2x3x4
+    # tori) and the direct collectives; the dims_create path builds its
+    # own Cartesian mesh; one stats() call unifies the cache state; and
+    # free() drops the comm's plan slice.
+    out = run_device_script("check_comm.py", devices=12)
+    assert "OK simulator oracles on the paper tori" in out
+    assert "OK all-gather == simulator oracle" in out
+    assert "OK reduce-scatter == simulator oracle" in out
+    assert "OK sub-comm plans == top-level plans" in out
+    assert "OK sub-comm execution bit-exact" in out
+    assert "OK torus_comm(p, d=2)" in out
+    assert "OK unified stats + free()" in out
+
+
+@pytest.mark.slow
 def test_overlap_engine_parity():
     out = run_device_script("check_overlap.py", devices=8)
     assert "OK overlap==factorized==direct" in out
