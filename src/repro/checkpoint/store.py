@@ -23,6 +23,7 @@ import os
 import re
 import shutil
 import threading
+import warnings
 from pathlib import Path
 
 import jax
@@ -150,16 +151,54 @@ def latest_step(directory) -> int | None:
     return steps[-1] if steps else None
 
 
+# Failures that mean "this checkpoint is unusable", as opposed to a
+# caller error: unreadable/corrupt files (OSError incl. the sha256
+# IOError), missing leaves, and decode errors from a flipped byte
+# (json/reshape ValueError, zlib.error; ZstdError when zstd is present).
+_INTEGRITY_ERRORS = (OSError, KeyError, ValueError, _zlib.error)
+if _HAVE_ZSTD:
+    _INTEGRITY_ERRORS = _INTEGRITY_ERRORS + (zstd.ZstdError,)
+
+
 def restore_checkpoint(directory, step: int | None, target_tree,
-                       shardings=None, verify: bool = True):
+                       shardings=None, verify: bool = True,
+                       fallback: bool = True):
     """Restore into the structure of ``target_tree`` (arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching tree of
-    ``NamedSharding`` for device placement (elastic re-mesh)."""
+    ``NamedSharding`` for device placement (elastic re-mesh).
+
+    With ``step=None`` (restore-latest) and ``fallback=True``, a
+    checkpoint that fails integrity checks (sha256 mismatch, truncated
+    or undecodable leaf, missing manifest entry) is *skipped with a
+    warning* and the next-newest retained checkpoint is tried — one
+    corrupt save must not strand a run that has older good state.  An
+    explicitly requested ``step`` still raises on corruption."""
     directory = Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
+    if step is not None:
+        return _restore_step(directory, step, target_tree, shardings,
+                             verify)
+    steps = all_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    last_err = None
+    for s in reversed(steps):
+        try:
+            return _restore_step(directory, s, target_tree, shardings,
+                                 verify)
+        except _INTEGRITY_ERRORS as e:
+            if not fallback:
+                raise
+            last_err = e
+            warnings.warn(
+                f"skipping checkpoint step {s}: "
+                f"{type(e).__name__}: {e}; falling back to next-newest",
+                RuntimeWarning, stacklevel=2)
+    raise IOError(f"all {len(steps)} retained checkpoints in "
+                  f"{directory} are unusable") from last_err
+
+
+def _restore_step(directory: Path, step: int, target_tree,
+                  shardings=None, verify: bool = True):
     base = directory / f"step_{step:08d}"
     with open(base / "manifest.json") as f:
         manifest = json.load(f)

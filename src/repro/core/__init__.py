@@ -51,8 +51,19 @@ from .autotune import (
     autotune,
     autotune_stats,
     default_db_path,
+    fingerprint_digest,
+    migrate_records,
     plan_db_key,
     reset_autotune_stats,
+)
+from .faults import (
+    DeviceLossError,
+    FaultError,
+    FaultInjector,
+    FaultSpec,
+    corrupt_checkpoint_leaf,
+    corrupt_tuning_db,
+    hold_tuning_db_lock,
 )
 from .simulator import (
     PAPER_EXAMPLES,
@@ -94,15 +105,18 @@ __all__ = [
     "A2APlan", "AllGatherPlan", "DCN", "ICI", "LinkModel", "Measurement",
     "PAPER_EXAMPLES", "RaggedA2APlan", "ReduceScatterPlan", "Schedule",
     "TorusComm", "TorusFactorization", "TuningDB",
+    "DeviceLossError", "FaultError", "FaultInjector", "FaultSpec",
     "Violation", "autotune", "autotune_stats", "bucket_occupancy",
     "cache_stats", "cart_create", "check_guidelines", "choose_algorithm",
     "choose_chunks", "choose_dimwise_algorithm", "choose_ragged_algorithm",
-    "collective_bytes_of",
+    "collective_bytes_of", "corrupt_checkpoint_leaf", "corrupt_tuning_db",
     "crossover_block_bytes", "default_db_path", "dims_create",
     "direct_all_to_all", "direct_all_to_all_tiled", "exact_alltoallv",
     "example_index_table", "factorized_all_to_all",
-    "factorized_all_to_all_tiled", "format_report", "free", "free_all",
-    "free_comms", "free_plans", "get_factorization", "host_alltoall",
+    "factorized_all_to_all_tiled", "fingerprint_digest", "format_report",
+    "free", "free_all",
+    "free_comms", "free_plans", "get_factorization", "hold_tuning_db_lock",
+    "host_alltoall", "migrate_records",
     "interleave_report", "max_dims", "next_pow2", "overlapped_all_to_all",
     "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
     "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",

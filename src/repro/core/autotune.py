@@ -117,14 +117,30 @@ class TuningDB:
     file loads as empty with a single warning; a failed write warns and
     leaves the in-memory state usable.  Writes are atomic (temp file +
     ``os.replace``) so a crashed process never truncates the DB.
+
+    Lock contention contract: the advisory flock serializing
+    read-merge-writes is acquired with a bounded timeout
+    (``lock_timeout`` seconds, exponential backoff between attempts;
+    default from ``$REPRO_TUNING_LOCK_TIMEOUT`` or 5s).  A wedged
+    lock-holder therefore degrades this process to *in-memory tuning* —
+    the record lands in a per-handle overlay that ``get``/``load`` still
+    see — instead of hanging the trainer on a file lock.
     """
 
-    def __init__(self, path: str | os.PathLike | None = None):
+    def __init__(self, path: str | os.PathLike | None = None,
+                 lock_timeout: float | None = None):
         self.path = Path(path).expanduser() if path is not None \
             else default_db_path()
         # precomputed string form: the plan registry embeds it in every
         # autotune cache key, on the steady-state fetch path
         self.path_key = str(self.path)
+        if lock_timeout is None:
+            lock_timeout = float(os.environ.get(
+                "REPRO_TUNING_LOCK_TIMEOUT", 5.0))
+        self.lock_timeout = lock_timeout
+        # records that could not be persisted (lock timeout): visible to
+        # this handle's reads, overwritten by any later successful put
+        self._overlay: dict[str, dict] = {}
 
     def generation(self) -> int:
         return _GENERATIONS.get(self.path_key, 0)
@@ -134,11 +150,12 @@ class TuningDB:
         try:
             raw = self.path.read_text()
         except FileNotFoundError:
-            return {}
-        except OSError as e:
+            return self._with_overlay({})
+        except (OSError, UnicodeDecodeError) as e:
+            # UnicodeDecodeError: corrupted-to-garbage bytes (not UTF-8)
             warnings.warn(f"unreadable tuning DB {self.path}: {e}; "
                           "treating as empty", stacklevel=2)
-            return {}
+            return self._with_overlay({})
         try:
             doc = json.loads(raw)
             if not isinstance(doc, dict) or \
@@ -147,15 +164,21 @@ class TuningDB:
         except (ValueError, TypeError) as e:
             warnings.warn(f"corrupt tuning DB {self.path} ({e}); "
                           "treating as empty", stacklevel=2)
-            return {}
+            return self._with_overlay({})
         if doc.get("version") != DB_VERSION:
             # A future format: don't guess, don't crash, don't clobber
             # until someone actually stores a new measurement.
             warnings.warn(f"tuning DB {self.path} has version "
                           f"{doc.get('version')!r} != {DB_VERSION}; "
                           "ignoring its entries", stacklevel=2)
-            return {}
-        return doc["entries"]
+            return self._with_overlay({})
+        return self._with_overlay(doc["entries"])
+
+    def _with_overlay(self, entries: dict) -> dict:
+        """Merge unpersisted (lock-timeout) records over the file state."""
+        if self._overlay:
+            entries = {**entries, **self._overlay}
+        return entries
 
     def get(self, key: str) -> dict | None:
         return self.load().get(key)
@@ -168,20 +191,33 @@ class TuningDB:
         keys against the shared default DB don't drop each other's
         records; where locking is unavailable the atomic replace still
         prevents corruption (last writer wins per whole file).
+
+        If the lock cannot be acquired within ``lock_timeout`` seconds
+        (a wedged holder), the record is kept in this handle's in-memory
+        overlay — reads still see it, a later successful ``put`` flushes
+        it — and False is returned after a warning, never a hang.
         """
         try:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             with self._locked():
-                entries = self.load()
+                entries = self.load()   # merges any pending overlay
                 entries[key] = record
                 doc = {"version": DB_VERSION, "entries": entries}
                 tmp = self.path.with_name(self.path.name + ".tmp")
                 tmp.write_text(json.dumps(doc, indent=1))
                 os.replace(tmp, self.path)
+        except TimeoutError as e:
+            self._overlay[key] = record
+            warnings.warn(
+                f"{e}; degrading to in-memory tuning (record kept in this "
+                "process, not persisted)", stacklevel=2)
+            _bump_generation(self.path)   # readers of this handle see it
+            return False
         except OSError as e:
             warnings.warn(f"could not write tuning DB {self.path}: {e}",
                           stacklevel=2)
             return False
+        self._overlay.clear()             # flushed with this write
         _bump_generation(self.path)
         return True
 
@@ -191,12 +227,28 @@ class TuningDB:
             import fcntl
         except ImportError:                   # non-POSIX: best effort
             return contextlib.nullcontext()
+        timeout = self.lock_timeout
 
         @contextlib.contextmanager
         def lock():
             lockfile = self.path.with_name(self.path.name + ".lock")
             with open(lockfile, "w") as fh:
-                fcntl.flock(fh, fcntl.LOCK_EX)
+                # Non-blocking acquisition with exponential backoff: a
+                # wedged holder must surface as a TimeoutError the caller
+                # degrades on, never as an indefinite flock wait.
+                deadline = time.perf_counter() + max(0.0, timeout)
+                delay = 0.005
+                while True:
+                    try:
+                        fcntl.flock(fh, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                        break
+                    except OSError:
+                        if time.perf_counter() >= deadline:
+                            raise TimeoutError(
+                                f"tuning-DB lock {lockfile} not acquired "
+                                f"within {timeout}s")
+                        time.sleep(delay)
+                        delay = min(delay * 2, 0.1)
                 try:
                     yield
                 finally:
@@ -207,11 +259,17 @@ class TuningDB:
         """Delete the DB file (missing file is fine).  Takes the same
         advisory lock as ``put`` so a concurrent read-merge-write can't
         resurrect the cleared entries."""
+        self._overlay.clear()
         try:
             with self._locked():
                 self.path.unlink()
         except FileNotFoundError:
             pass
+        except TimeoutError as e:
+            warnings.warn(f"{e}; cleared in-memory state only",
+                          stacklevel=2)
+            _bump_generation(self.path)
+            return
         except OSError as e:
             warnings.warn(f"could not delete tuning DB {self.path}: {e}",
                           stacklevel=2)
@@ -259,17 +317,20 @@ def reset_autotune_stats() -> None:
         _STATS[k] = 0
 
 
+def fingerprint_digest(dev_key) -> str:
+    """Short stable digest of a ``core.cache.device_fingerprint`` tuple —
+    512-device fingerprints stay out of the JSON keys ("none" for
+    device-agnostic dims-tuple plans, which therefore never hit records
+    stored from real measurements)."""
+    if dev_key is None:
+        return "none"
+    return hashlib.sha1(repr(dev_key).encode()).hexdigest()[:16]
+
+
 def plan_db_key(dev_key, dims, axis_names, block_shape, dtype,
                 variant: str) -> str:
-    """Stable DB key: device-fingerprint digest + the plan identity.
-
-    ``dev_key`` is the ``core.cache.device_fingerprint`` tuple (digested —
-    512-device fingerprints stay out of the JSON keys) or None for
-    device-agnostic dims-tuple plans, which therefore never hit records
-    stored from real measurements.
-    """
-    fp = "none" if dev_key is None else \
-        hashlib.sha1(repr(dev_key).encode()).hexdigest()[:16]
+    """Stable DB key: device-fingerprint digest + the plan identity."""
+    fp = fingerprint_digest(dev_key)
     block = "x".join(str(int(s)) for s in block_shape)
     return (f"fp:{fp}|dims:{','.join(str(int(s)) for s in dims)}"
             f"|axes:{','.join(axis_names)}|block:{block}"
@@ -314,6 +375,44 @@ def demote_hit_to_miss() -> None:
     measurements (what the dryrun telemetry documents)."""
     _STATS["db_hits"] -= 1
     _STATS["db_misses"] += 1
+
+
+def migrate_records(db: "TuningDB", old_dev_key, new_dev_key, dims,
+                    axis_names) -> int:
+    """Re-key measured winners from a dead device set onto its rebuilt
+    survivor torus (the ``TorusComm.rebuild`` tuning-migration step).
+
+    Only records whose plan identity is still valid on the new torus
+    migrate: every axis the record was measured over must exist in the
+    new comm's ``axis_names`` with the *same extent* (the typical case is
+    a sub-axes plan — e.g. a single-axis exchange whose dimension length
+    survived the re-factorization).  Migrated records keep their measured
+    winner and links but gain ``"migrated": True`` — they are a
+    warm-start heuristic, since the surviving physical links may differ;
+    a later explicit :func:`autotune` overwrites them with fresh
+    measurements.  Returns the number of records migrated.
+    """
+    old_fp, new_fp = fingerprint_digest(old_dev_key), \
+        fingerprint_digest(new_dev_key)
+    if old_fp == new_fp or old_fp == "none" or new_fp == "none":
+        return 0
+    new_extent = {a: int(Dk) for a, Dk in zip(axis_names, dims)}
+    prefix = f"fp:{old_fp}|"
+    migrated = 0
+    for key, rec in db.load().items():
+        if not key.startswith(prefix) or not _valid_record(rec):
+            continue
+        rec_axes = rec.get("axis_names") or ()
+        rec_dims = rec.get("dims") or ()
+        if not rec_axes or len(rec_axes) != len(rec_dims):
+            continue
+        if any(new_extent.get(a) != int(Dk)
+               for a, Dk in zip(rec_axes, rec_dims)):
+            continue
+        if db.put(f"fp:{new_fp}|" + key[len(prefix):],
+                  {**rec, "migrated": True}):
+            migrated += 1
+    return migrated
 
 
 def measured_links(record: dict) -> tuple[LinkModel, ...] | None:

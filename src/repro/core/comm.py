@@ -455,6 +455,9 @@ class TorusComm:
         self._comm_key = None
         self._identity = None
         self._freed = False
+        # elastic lineage: set by rebuild() on the comm it returns
+        self.rebuilt_from: dict | None = None
+        self.tuning_migrated: int = 0
 
     # -- identity ----------------------------------------------------------
 
@@ -624,6 +627,67 @@ class TorusComm:
     def __exit__(self, *exc) -> None:
         self.free()
 
+    def rebuild(self, surviving_devices, *, d: int | None = None,
+                migrate_tuning: bool = True) -> "TorusComm":
+        """The elastic rebuild step of detect → degrade → rebuild →
+        resume: after device loss, re-create the communicator over the
+        survivors.
+
+        * re-factorizes ``p' = len(surviving_devices)`` into ``d``
+          balanced factors (``MPI_Dims_create`` semantics via
+          ``core.dims.dims_create``) and builds the survivor Cartesian
+          mesh through ``core.cache.cart_create``;
+        * frees exactly *this* comm's slice of the plan LRU and its
+          factorization refs (``free()`` — other comms' cached plans are
+          untouched, so a co-resident serving comm keeps its warm state);
+        * migrates tuning-DB winners whose device fingerprint belonged to
+          the dead comm and whose per-axis extents still hold on the new
+          torus (``autotune.migrate_records``; marked ``migrated`` — a
+          warm start, re-measured by the next explicit autotune);
+        * returns the fresh comm.  Plans re-resolve **lazily** on first
+          use — nothing is eagerly rebuilt, exactly like a cold comm.
+
+        ``surviving_devices`` is a device list (order defines the new
+        torus linearization), or an int: the survivor count, taking the
+        first ``p'`` devices of the old mesh (device-backed comms) or
+        staying device-agnostic (dims-tuple comms).  Axis names are
+        reused, so call sites keyed on axis names survive the rebuild.
+        """
+        from .dims import dims_create
+        d = self.d if d is None else int(d)
+        if isinstance(surviving_devices, int):
+            survivors = None if self.mesh is None \
+                else list(self.mesh.devices.flat)[:surviving_devices]
+            p2 = surviving_devices
+        else:
+            survivors = list(surviving_devices)
+            p2 = len(survivors)
+        if p2 <= 0:
+            raise ValueError(f"no surviving devices (p'={p2})")
+        if self.p == p2 and survivors is None and d == self.d:
+            raise ValueError("rebuild needs a changed device set; "
+                             f"p'={p2} == p={self.p} with no device list")
+        dims2 = tuple(reversed(dims_create(p2, d)))
+        names = self.axis_names if len(self.axis_names) == len(dims2) \
+            else tuple(f"t{i}" for i in range(len(dims2)))
+        source = dims2 if survivors is None \
+            else cart_create(survivors, dims2, names)
+        old = {"dims": self.dims, "axes": self.axis_names, "p": self.p,
+               "dev_key": self.dev_key}
+        # invalidate exactly the dead comm's plan slice + fact refs
+        self.free()
+        fresh = torus_comm(source, names, variant=self.variant, db=self._db)
+        fresh.rebuilt_from = {"dims": list(old["dims"]),
+                              "axes": list(old["axes"]), "p": old["p"]}
+        if migrate_tuning and old["dev_key"] is not None \
+                and fresh.dev_key is not None:
+            from .autotune import get_default_db, migrate_records
+            db = self._db if self._db is not None else get_default_db()
+            fresh.tuning_migrated = migrate_records(
+                db, old["dev_key"], fresh.dev_key, fresh.dims,
+                fresh.axis_names)
+        return fresh
+
     # -- introspection ------------------------------------------------------
 
     def describe(self) -> dict:
@@ -640,6 +704,8 @@ class TorusComm:
             "device_backed": self.mesh is not None,
             "plans": len(self._plan_keys),
             "subs": sorted(list(a) for a in self._subs),
+            "rebuilt_from": self.rebuilt_from,
+            "tuning_migrated": self.tuning_migrated,
         }
 
     def stats(self) -> dict:

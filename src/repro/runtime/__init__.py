@@ -1,6 +1,7 @@
 """Fault-tolerant training runtime."""
 
 from .trainer import Trainer, TrainerConfig
-from .watchdog import StragglerWatchdog
+from .watchdog import Action, EscalationPolicy, StragglerWatchdog
 
-__all__ = ["Trainer", "TrainerConfig", "StragglerWatchdog"]
+__all__ = ["Action", "EscalationPolicy", "Trainer", "TrainerConfig",
+           "StragglerWatchdog"]

@@ -30,6 +30,9 @@ class Request:
     max_new: int
     eos_id: int | None = None
     generated: list[int] = field(default_factory=list)
+    # how many generated tokens are already folded into ``prompt`` by
+    # ``requeue_inflight`` — keeps a second requeue from re-folding them
+    folded: int = 0
 
 
 def _reset_slot(caches, fresh, b: int):
@@ -68,6 +71,56 @@ class ContinuousBatcher:
     # ---- scheduling ----
     def submit(self, req: Request):
         self.queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished: queued plus in-flight."""
+        return len(self.queue) + sum(s is not None for s in self.slots)
+
+    # ---- elasticity ----
+    def requeue_inflight(self) -> int:
+        """Pull every in-flight request back to the front of the queue
+        for deterministic replay after a device loss: the tokens already
+        generated are folded into the prompt, so re-admission replays
+        the exact token feed (prompt, then prior generations) through
+        prefill and resumes decoding where the request left off —
+        nothing is dropped, outputs are unchanged.  Returns how many
+        requests were requeued."""
+        moved = []
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.prompt = list(req.prompt) + list(req.generated[req.folded:])
+            req.folded = len(req.generated)
+            moved.append(req)
+            self.slots[b] = None
+            self.prefill_cursor[b] = 0
+        self.queue[:0] = moved
+        return len(moved)
+
+    def rebuild(self, *, model=None, params=None, serve_step=None) -> int:
+        """After device loss: requeue all in-flight requests, then
+        rebuild the slot caches (and optionally swap model / resharded
+        params / jitted step) on the surviving device set.  The queue —
+        including the requeued in-flight work — drains on the next
+        ``step()``/``run()``; no request is dropped."""
+        n = self.requeue_inflight()
+        if model is not None:
+            self.model = model
+        if params is not None:
+            self.params = params
+        self.caches = self.model.init_caches(self.max_batch, self.max_seq)
+        self._fresh = self.caches
+        self.prefill_cursor = [0] * self.max_batch
+        if serve_step is not None:
+            self._step = serve_step
+        elif model is not None or params is not None:
+            model_ = self.model
+
+            def default_step(params, toks, caches):
+                return model_.decode_step(params, toks, caches)
+            self._step = jax.jit(default_step)
+        return n
 
     def _admit(self):
         for b in range(self.max_batch):

@@ -1,4 +1,4 @@
-"""Fault-tolerant trainer: checkpoint/restart, preemption, stragglers.
+"""Fault-tolerant trainer: checkpoint/restart, preemption, elasticity.
 
 The loop is restart-idempotent: all state (params, optimizer, data cursor,
 step) round-trips through the checkpoint, so ``Trainer.run()`` after a
@@ -6,6 +6,24 @@ crash resumes bit-exact (tested).  SIGTERM triggers a final synchronous
 checkpoint before exit (preemption handling).  Gradient accumulation and
 the straggler watchdog live here; the step function itself is the shared
 jitted ``make_train_step``.
+
+With ``TrainerConfig.elastic`` the loop drives on the watchdog's
+escalation :class:`~repro.runtime.watchdog.Action` instead of bare
+verdict strings — detect→degrade→rebuild→resume:
+
+* ``retry`` (straggler): the step already committed, so a retry is a
+  backoff sleep, never a re-execution (re-running would double-apply
+  the gradient update).
+* ``recover`` after a *hang*: the state is intact, just slow —
+  checkpoint-now, then ``rebuild_fn`` re-factorizes the communicator
+  (``TorusComm.rebuild``) and the trainer restores onto the new mesh via
+  elastic resharding.
+* ``recover`` after *device loss* (:class:`DeviceLossError` escaping the
+  step): the in-flight step never committed and the devices holding the
+  live state are gone, so the current state is NOT checkpointed —
+  recovery restores the last durable checkpoint onto the survivor torus.
+* ``abort``: budgets exhausted — checkpoint if the state is trustworthy
+  and raise for external restart.
 """
 
 from __future__ import annotations
@@ -20,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
+from repro.core.faults import DeviceLossError, FaultError
 from repro.runtime.watchdog import StepTimer, StragglerWatchdog
 
 
@@ -33,6 +52,9 @@ class TrainerConfig:
     grad_accum: int = 1
     async_checkpoint: bool = True
     abort_on_hang: bool = True
+    # drive the escalation policy (retry/recover/abort) instead of the
+    # legacy hang-abort; requires rebuild_fn for the recover path
+    elastic: bool = False
 
 
 @dataclass
@@ -45,6 +67,11 @@ class Trainer:
     step: int = 0
     metrics_log: list = field(default_factory=list)
     watchdog: StragglerWatchdog = field(default_factory=StragglerWatchdog)
+    # elastic recovery hook: (trainer, error_or_None) rebuilds the
+    # communicator/mesh on the survivors, swaps train_step/data as
+    # needed, and returns the shardings tree for the elastic restore
+    rebuild_fn: Callable | None = None
+    recoveries_done: int = 0
     _preempted: bool = False
 
     def __post_init__(self):
@@ -80,6 +107,21 @@ class Trainer:
             self._preempted = True
         signal.signal(signal.SIGTERM, handler)
 
+    # ---- elastic recovery ----
+    def _recover(self, error: Exception | None, reason: str) -> None:
+        """checkpoint-now (hang only) → rebuild comm → restore → resume."""
+        if error is None:
+            # hang: the live state is intact, make it durable first
+            self.save(sync=True)
+        if self.rebuild_fn is None:
+            raise FaultError(f"recovery requested ({reason}) but no "
+                             f"rebuild_fn is configured")
+        shardings = self.rebuild_fn(self, error)
+        if not self.try_restore(shardings):
+            raise FaultError(f"recovery ({reason}): no durable "
+                             f"checkpoint to restore from")
+        self.recoveries_done += 1
+
     # ---- main loop ----
     def run(self, max_steps: int | None = None):
         cfg = self.config
@@ -87,23 +129,51 @@ class Trainer:
                   self.step + (max_steps or cfg.total_steps))
         while self.step < end:
             batch = self.data.next()
-            with StepTimer() as t:
-                # grad accumulation happens inside the jitted step
-                # (make_train_step(grad_accum=...)); cfg.grad_accum is
-                # plumbing for the builder, not a host loop.
-                self.params, self.opt_state, metrics = \
-                    self.train_step(self.params, self.opt_state, batch)
-                jax.block_until_ready(metrics["total_loss"])
+            try:
+                with StepTimer() as t:
+                    # grad accumulation happens inside the jitted step
+                    # (make_train_step(grad_accum=...)); cfg.grad_accum
+                    # is plumbing for the builder, not a host loop.
+                    self.params, self.opt_state, metrics = \
+                        self.train_step(self.params, self.opt_state, batch)
+                    jax.block_until_ready(metrics["total_loss"])
+            except DeviceLossError as err:
+                if not cfg.elastic:
+                    raise
+                # the step never committed: params/opt/step/data-cursor
+                # roll back to the last checkpoint during recovery
+                action = self.watchdog.policy(self.step + 1, t.seconds,
+                                              verdict="device_loss")
+                if action.kind == "recover":
+                    self._recover(err, action.reason)
+                    continue
+                raise FaultError(f"device loss at step {self.step + 1}: "
+                                 f"{action.reason}") from err
             self.step += 1
 
-            verdict = self.watchdog.observe(self.step, t.seconds)
-            if verdict == "hang" and cfg.abort_on_hang:
-                self.save(sync=True)
-                raise RuntimeError(
-                    f"watchdog: presumed hang at step {self.step} "
-                    f"({t.seconds:.3f}s vs median "
-                    f"{self.watchdog.median:.3f}s); checkpointed for "
-                    f"restart")
+            if cfg.elastic:
+                action = self.watchdog.policy(self.step, t.seconds)
+                verdict = self.watchdog.last_verdict
+                if action.kind == "retry":
+                    # the slow step still committed — a straggler retry
+                    # is backoff-then-continue, never a re-execution
+                    time.sleep(action.backoff)
+                elif action.kind == "recover":
+                    self._recover(None, action.reason)
+                    continue
+                elif action.kind == "abort":
+                    self.save(sync=True)
+                    raise FaultError(f"watchdog abort at step "
+                                     f"{self.step}: {action.reason}")
+            else:
+                verdict = self.watchdog.observe(self.step, t.seconds)
+                if verdict == "hang" and cfg.abort_on_hang:
+                    self.save(sync=True)
+                    raise RuntimeError(
+                        f"watchdog: presumed hang at step {self.step} "
+                        f"({t.seconds:.3f}s vs median "
+                        f"{self.watchdog.median:.3f}s); checkpointed for "
+                        f"restart")
 
             if self.step % cfg.log_every == 0 or self.step == end:
                 row = {k: float(v) for k, v in metrics.items()}
@@ -118,4 +188,3 @@ class Trainer:
                 return "preempted"
         self.ckpt.wait()
         return "done"
-

@@ -1,14 +1,21 @@
-"""Straggler / hang detection from per-step wall times.
+"""Straggler / hang detection and the escalation policy state machine.
 
 At multi-pod scale the common failure modes are (a) a slow host
-(straggler) stretching every step, and (b) a hung collective.  Both show
-up in the step-time series.  The watchdog keeps a robust running estimate
-(median + MAD over a window) and classifies each step; the trainer policy
-reacts (log, checkpoint-now, or abort-for-restart).
+(straggler) stretching every step, (b) a hung collective, and (c) a lost
+device surfacing as an exception from the runtime.  The first two show
+up in the step-time series: :class:`StragglerWatchdog` keeps a robust
+running estimate (median + MAD over a window) and classifies each step.
+What to *do* about a verdict is the :class:`EscalationPolicy` state
+machine — bounded retry with exponential backoff for stragglers,
+recovery (checkpoint-now → rebuild comm → restore → resume) for hangs
+and device loss, and abort when the retry/recovery budget or the
+per-incident timeout is exhausted.  The trainer and serving loops drive
+on the returned :class:`Action`, never on bare strings.
 
 On a real cluster the per-host step times come from the coordination
 service; here the single process stands in for the fleet, and the tests
-inject synthetic slow steps.
+inject synthetic slow steps and device-loss exceptions
+(``core.faults``).
 """
 
 from __future__ import annotations
@@ -17,6 +24,110 @@ import statistics
 import time
 from collections import deque
 from dataclasses import dataclass, field
+
+VERDICTS = ("ok", "straggler", "hang", "device_loss")
+ACTIONS = ("continue", "retry", "recover", "abort")
+
+
+@dataclass(frozen=True)
+class Action:
+    """One escalation decision: what the control loop does next.
+
+    ``kind``: "continue" (nothing to do), "retry" (re-attempt after
+    ``backoff`` seconds), "recover" (checkpoint-now → rebuild comm →
+    restore → resume), or "abort" (checkpoint and raise for external
+    restart).
+    """
+
+    kind: str
+    backoff: float = 0.0
+    reason: str = ""
+
+    def __post_init__(self):
+        if self.kind not in ACTIONS:
+            raise ValueError(f"unknown action {self.kind!r}")
+
+
+@dataclass
+class EscalationPolicy:
+    """Bounded-retry escalation: verdicts in, :class:`Action` out.
+
+    Transitions:
+
+    * ``ok`` closes any open incident: the retry streak and incident
+      clock reset (the recovery budget is per-run, not per-incident).
+    * ``straggler`` → ``retry`` with exponential backoff
+      (``backoff_base * backoff_factor**(n-1)``) up to ``max_retries``
+      consecutive times; a straggler streak past the budget escalates to
+      the hang handling below.
+    * ``hang`` / ``device_loss`` → ``recover`` up to ``max_recoveries``
+      times per run, then ``abort``.
+    * any incident open longer than ``incident_timeout`` wall seconds →
+      ``abort`` regardless of remaining budget (the timeout-per-verdict
+      backstop: escalation itself must not hang).
+
+    ``decide`` takes an optional ``now`` (monotonic seconds) so the
+    state machine is fully deterministic under test.
+    """
+
+    max_retries: int = 2
+    backoff_base: float = 0.05
+    backoff_factor: float = 2.0
+    max_recoveries: int = 2
+    incident_timeout: float = 300.0
+    retries: int = 0
+    recoveries: int = 0
+    transitions: deque = field(
+        default_factory=lambda: deque(maxlen=256))
+    _incident_start: float | None = None
+
+    def decide(self, verdict, now: float | None = None) -> Action:
+        kind = str(verdict)
+        if kind not in VERDICTS:
+            raise ValueError(f"unknown verdict {kind!r}; "
+                             f"expected one of {VERDICTS}")
+        now = time.monotonic() if now is None else now
+        action = self._decide(kind, now)
+        self.transitions.append((kind, action.kind))
+        return action
+
+    def _decide(self, kind: str, now: float) -> Action:
+        if kind == "ok":
+            self.retries = 0
+            self._incident_start = None
+            return Action("continue")
+        if self._incident_start is None:
+            self._incident_start = now
+        open_for = now - self._incident_start
+        if open_for > self.incident_timeout:
+            return Action("abort",
+                          reason=f"incident open {open_for:.1f}s > "
+                                 f"timeout {self.incident_timeout}s")
+        if kind == "straggler":
+            if self.retries < self.max_retries:
+                self.retries += 1
+                backoff = self.backoff_base \
+                    * self.backoff_factor ** (self.retries - 1)
+                return Action("retry", backoff=backoff,
+                              reason=f"straggler retry "
+                                     f"{self.retries}/{self.max_retries}")
+            kind = "hang"   # persistent straggler: escalate
+        # hang / device_loss: the recovery ladder
+        if self.recoveries < self.max_recoveries:
+            self.recoveries += 1
+            self.retries = 0
+            return Action("recover",
+                          reason=f"{kind}: recovery "
+                                 f"{self.recoveries}/{self.max_recoveries}")
+        return Action("abort",
+                      reason=f"{kind}: recovery budget "
+                             f"({self.max_recoveries}) exhausted")
+
+    def reset(self) -> None:
+        """Forget all streaks and budgets (a fresh run)."""
+        self.retries = 0
+        self.recoveries = 0
+        self._incident_start = None
 
 
 @dataclass
@@ -29,8 +140,24 @@ class StragglerWatchdog:
     # relative test promote OS scheduling jitter to an abort
     hang_floor_seconds: float = 1.0
     min_samples: int = 5
+    # anomalous-step events are bounded: a weeks-long run with a noisy
+    # host must not grow the list forever; overflow is counted, not kept
+    max_events: int = 512
+    events_dropped: int = 0
+    last_verdict: str = "ok"
+    escalation: EscalationPolicy = field(default_factory=EscalationPolicy)
     _times: deque = field(default_factory=lambda: deque(maxlen=256))
-    events: list = field(default_factory=list)
+    events: deque = None
+
+    def __post_init__(self):
+        if self.events is None:
+            self.events = deque(maxlen=self.max_events)
+
+    def _record(self, event: tuple) -> None:
+        if self.events.maxlen is not None \
+                and len(self.events) == self.events.maxlen:
+            self.events_dropped += 1
+        self.events.append(event)
 
     def observe(self, step: int, seconds: float) -> str:
         """Classify a step: 'ok' | 'straggler' | 'hang'."""
@@ -42,12 +169,31 @@ class StragglerWatchdog:
         mad = statistics.median([abs(t - med) for t in history]) or 1e-9
         if seconds > max(self.hang_factor * med, med + 20 * mad) \
                 and seconds >= self.hang_floor_seconds:
-            self.events.append(("hang", step, seconds, med))
+            self._record(("hang", step, seconds, med))
             return "hang"
         if seconds > max(self.slow_factor * med, med + 8 * mad):
-            self.events.append(("straggler", step, seconds, med))
+            self._record(("straggler", step, seconds, med))
             return "straggler"
         return "ok"
+
+    def policy(self, step: int, seconds: float, *,
+               verdict: str | None = None,
+               now: float | None = None) -> Action:
+        """The control-loop hook: classify the step (or accept an
+        externally detected ``verdict``, e.g. "device_loss" from a
+        :class:`~repro.core.faults.DeviceLossError`) and run it through
+        the escalation policy, returning the :class:`Action` — not a
+        bare string.  Non-continue actions are recorded as events."""
+        if verdict is None:
+            verdict = self.observe(step, seconds)
+        elif verdict != "ok":
+            self._record((verdict, step, seconds, self.median))
+        self.last_verdict = verdict
+        action = self.escalation.decide(verdict, now=now)
+        if action.kind != "continue":
+            self._record((f"action:{action.kind}", step, seconds,
+                          action.reason))
+        return action
 
     @property
     def median(self) -> float:

@@ -130,6 +130,8 @@ class TestSub:
             "device_backed": False,
             "plans": 1,
             "subs": [],
+            "rebuilt_from": None,
+            "tuning_migrated": 0,
         }
         d = comm.describe()
         assert d["parent"] is None and d["subs"] == [["j"]]

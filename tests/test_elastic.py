@@ -1,0 +1,423 @@
+"""Elasticity unit tests: fault injection, the escalation-policy state
+machine, ``TorusComm.rebuild`` cache/stats invariants, tuning-record
+migration, TuningDB lock-timeout degradation, checkpoint corrupt-leaf
+fallback, and serving requeue.
+
+Multi-device rebuild parity (kill a device subset, rebuild, bit-exact
+resumed all-to-all on the survivor torus, trainer restore) runs in
+``tests/device_scripts/check_rebuild.py`` (see test_multidevice.py).
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import restore_checkpoint, save_checkpoint
+from repro.core import cache as core_cache
+from repro.core import comm as core_comm
+from repro.core import plan as core_plan
+from repro.core.autotune import (
+    TuningDB,
+    fingerprint_digest,
+    migrate_records,
+    plan_db_key,
+)
+from repro.core.cache import cart_create, free_all
+from repro.core.comm import free_comms, torus_comm
+from repro.core.faults import (
+    DeviceLossError,
+    FaultInjector,
+    FaultSpec,
+    corrupt_checkpoint_leaf,
+    corrupt_tuning_db,
+    hold_tuning_db_lock,
+)
+from repro.core.plan import free_plans, plan_all_to_all, plan_cache_stats
+from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.watchdog import (
+    Action,
+    EscalationPolicy,
+    StragglerWatchdog,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registries():
+    free_comms()
+    free_plans()
+    free_all()
+    core_plan._PLANS.stats.update(hits=0, misses=0, evictions=0)
+    core_cache._REGISTRY.stats.update(hits=0, misses=0, evictions=0)
+    core_comm._COMMS.stats.update(hits=0, misses=0, evictions=0)
+    yield
+    free_comms()
+    free_plans()
+    free_all()
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+class TestFaultInjector:
+    def test_at_call_device_loss(self):
+        inj = FaultInjector((FaultSpec("device_loss", at_call=3,
+                                       devices=(8, 9)),))
+        inj.check()
+        inj.check()
+        with pytest.raises(DeviceLossError) as ei:
+            inj.check()
+        assert ei.value.devices == (8, 9)
+        assert inj.fired == [("device_loss", "a2a", 3)]
+        inj.check()                     # call 4: fires no more
+
+    def test_every_and_label_filtering(self):
+        inj = FaultInjector((FaultSpec("slow", every=2,
+                                       delay_seconds=0.0, label="x"),))
+        for _ in range(4):
+            inj.check("x")
+        for _ in range(4):
+            inj.check("y")              # other label: never fires
+        assert inj.fired == [("slow", "x", 2), ("slow", "x", 4)]
+
+    def test_probability_is_seed_deterministic(self):
+        def run(seed):
+            inj = FaultInjector((FaultSpec("slow", probability=0.3,
+                                           delay_seconds=0.0),), seed=seed)
+            for _ in range(50):
+                inj.check()
+            return [c for _, _, c in inj.fired]
+        assert run(7) == run(7)
+        assert run(7) != run(8)
+
+    def test_install_uninstall_on_plan(self):
+        mesh = cart_create(1, (1,), ("x",))
+        plan = plan_all_to_all(mesh, ("x",), (4,), "float32",
+                               backend="direct")
+        inj = FaultInjector((FaultSpec("device_loss", at_call=1,
+                                       devices=(0,)),))
+        inj.install(plan, "a2a")
+        inj.install(plan, "a2a")        # idempotent
+        x = jnp.zeros((1, 1, 4), jnp.float32)
+        with pytest.raises(DeviceLossError):
+            plan.host_fn(mesh)(x)
+        inj.uninstall(plan)
+        assert "host_fn" not in plan.__dict__
+        np.testing.assert_array_equal(np.asarray(plan.host_fn(mesh)(x)),
+                                      np.asarray(x))
+
+    def test_bad_spec_kind(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("meteor")
+
+
+# ---------------------------------------------------------------------------
+# Escalation policy state machine
+# ---------------------------------------------------------------------------
+
+class TestEscalationPolicy:
+    def test_ok_is_continue(self):
+        p = EscalationPolicy()
+        assert p.decide("ok").kind == "continue"
+
+    def test_straggler_retry_ladder_with_backoff(self):
+        p = EscalationPolicy(max_retries=2, backoff_base=0.05,
+                             backoff_factor=2.0)
+        a1 = p.decide("straggler", now=0.0)
+        a2 = p.decide("straggler", now=1.0)
+        assert (a1.kind, a2.kind) == ("retry", "retry")
+        assert a1.backoff == pytest.approx(0.05)
+        assert a2.backoff == pytest.approx(0.10)
+        # budget exhausted: the persistent straggler escalates to recovery
+        a3 = p.decide("straggler", now=2.0)
+        assert a3.kind == "recover"
+
+    def test_ok_resets_retry_streak(self):
+        p = EscalationPolicy(max_retries=1)
+        assert p.decide("straggler", now=0.0).kind == "retry"
+        assert p.decide("ok", now=1.0).kind == "continue"
+        assert p.decide("straggler", now=2.0).kind == "retry"
+
+    def test_recovery_budget_then_abort(self):
+        p = EscalationPolicy(max_recoveries=2)
+        assert p.decide("device_loss", now=0.0).kind == "recover"
+        assert p.decide("ok", now=1.0).kind == "continue"
+        assert p.decide("hang", now=2.0).kind == "recover"
+        a = p.decide("device_loss", now=3.0)
+        assert a.kind == "abort" and "budget" in a.reason
+
+    def test_incident_timeout_aborts(self):
+        p = EscalationPolicy(max_retries=100, incident_timeout=30.0)
+        assert p.decide("straggler", now=0.0).kind == "retry"
+        a = p.decide("straggler", now=31.0)
+        assert a.kind == "abort" and "timeout" in a.reason
+
+    def test_unknown_inputs_raise(self):
+        with pytest.raises(ValueError, match="unknown verdict"):
+            EscalationPolicy().decide("gremlin")
+        with pytest.raises(ValueError, match="unknown action"):
+            Action("shrug")
+
+    def test_transitions_recorded(self):
+        p = EscalationPolicy()
+        p.decide("ok", now=0.0)
+        p.decide("hang", now=1.0)
+        assert list(p.transitions) == [("ok", "continue"),
+                                       ("hang", "recover")]
+
+
+class TestWatchdogBounds:
+    def test_events_bounded_with_drop_count(self):
+        w = StragglerWatchdog(max_events=4)
+        for i in range(10):
+            w._record(("straggler", i, 1.0, 0.1))
+        assert len(w.events) == 4
+        assert w.events_dropped == 6
+        assert [e[1] for e in w.events] == [6, 7, 8, 9]   # newest kept
+
+    def test_policy_hook_returns_action(self):
+        w = StragglerWatchdog()
+        for i in range(10):
+            assert w.policy(i, 0.1).kind == "continue"
+        assert w.last_verdict == "ok"
+        a = w.policy(11, 0.0, verdict="device_loss")
+        assert isinstance(a, Action) and a.kind == "recover"
+        assert w.last_verdict == "device_loss"
+        kinds = [e[0] for e in w.events]
+        assert "device_loss" in kinds and "action:recover" in kinds
+
+    def test_observe_still_returns_strings(self):
+        w = StragglerWatchdog(min_samples=3)
+        for i in range(6):
+            assert w.observe(i, 0.1) == "ok"
+        assert w.observe(7, 0.45) == "straggler"
+
+
+# ---------------------------------------------------------------------------
+# TorusComm.rebuild
+# ---------------------------------------------------------------------------
+
+class TestRebuild:
+    def test_refactorizes_and_invalidates_own_slice_only(self):
+        comm = torus_comm((4, 2), ("i", "j"))
+        comm.all_to_all((4,), "float32", backend="direct")
+        comm.all_to_all((8,), "float32", backend="factorized")
+        other = torus_comm((3,), ("k",))
+        kept = other.all_to_all((4,), "float32", backend="direct")
+        assert plan_cache_stats()["size"] == 3
+
+        fresh = comm.rebuild(6)
+        # p'=6, d=2 -> balanced factors (3,2), fastest digit first (2,3)
+        assert fresh.dims == (2, 3) and fresh.p == 6
+        assert fresh.axis_names == ("i", "j")
+        assert comm._freed and not fresh._freed
+        assert fresh.rebuilt_from == {"dims": [4, 2], "axes": ["i", "j"],
+                                      "p": 8}
+        # exactly the dead comm's plan slice is gone; the co-resident
+        # comm's cached plan survived and is still the same object
+        assert plan_cache_stats()["size"] == 1
+        assert other.all_to_all((4,), "float32", backend="direct") is kept
+        # plans re-resolve lazily on the survivor torus
+        fresh.all_to_all((4,), "float32", backend="direct")
+        assert plan_cache_stats()["size"] == 2
+        d = fresh.describe()
+        assert d["rebuilt_from"]["p"] == 8 and d["tuning_migrated"] == 0
+        json.dumps(d)
+
+    def test_d_override_regenerates_axis_names(self):
+        comm = torus_comm((4, 2), ("i", "j"))
+        fresh = comm.rebuild(8, d=3)
+        assert fresh.dims == (2, 2, 2)
+        assert fresh.axis_names == ("t0", "t1", "t2")
+
+    def test_rejects_empty_or_unchanged(self):
+        comm = torus_comm((4, 2), ("i", "j"))
+        with pytest.raises(ValueError, match="no surviving"):
+            comm.rebuild(0)
+        with pytest.raises(ValueError, match="changed device set"):
+            comm.rebuild(8)
+
+    def test_registry_stays_balanced(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        comm.all_to_all((4,), "float32", backend="direct")
+        fresh = comm.rebuild(4)
+        fresh.all_to_all((4,), "float32", backend="direct")
+        fresh.free()
+        assert plan_cache_stats()["size"] == 0
+        # both comms left the registry: re-asking builds fresh objects
+        assert torus_comm((2, 3), ("i", "j")) is not comm
+        assert torus_comm((2, 2), ("i", "j")) is not fresh
+
+
+# ---------------------------------------------------------------------------
+# Tuning-record migration
+# ---------------------------------------------------------------------------
+
+def _record(axes, dims):
+    return {"version": 1,
+            "winner": {"backend": "factorized", "round_order": [0],
+                       "n_chunks": 1, "median_us": 10.0},
+            "axis_names": list(axes), "dims": list(dims)}
+
+
+class TestMigrateRecords:
+    def test_migrates_only_surviving_extents(self, tmp_path):
+        db = TuningDB(tmp_path / "t.json")
+        old_key, new_key = ((0, "cpu"), (1, "cpu")), ((0, "cpu"),)
+        new_dims, new_axes = (2, 4), ("i", "j")
+        # axis j kept extent 4 across the rebuild -> migrates
+        db.put(plan_db_key(old_key, (4,), ("j",), (8,), "float32",
+                           "natural"), _record(("j",), (4,)))
+        # axis i changed extent (4 -> 2) -> stays behind
+        db.put(plan_db_key(old_key, (4,), ("i",), (8,), "float32",
+                           "natural"), _record(("i",), (4,)))
+        # full-torus record over the old shape -> stays behind
+        db.put(plan_db_key(old_key, (4, 2), ("i", "j"), (8,), "float32",
+                           "natural"), _record(("i", "j"), (4, 2)))
+        n = migrate_records(db, old_key, new_key, new_dims, new_axes)
+        assert n == 1
+        rec = db.get(plan_db_key(new_key, (4,), ("j",), (8,), "float32",
+                                 "natural"))
+        assert rec is not None and rec["migrated"] is True
+        assert rec["winner"]["backend"] == "factorized"
+        # nothing migrated for the changed/foreign identities
+        assert db.get(plan_db_key(new_key, (4,), ("i",), (8,), "float32",
+                                  "natural")) is None
+
+    def test_noop_for_same_or_deviceless_fingerprints(self, tmp_path):
+        db = TuningDB(tmp_path / "t.json")
+        key = ((0, "cpu"),)
+        assert migrate_records(db, key, key, (2,), ("i",)) == 0
+        assert migrate_records(db, None, key, (2,), ("i",)) == 0
+        assert fingerprint_digest(None) == "none"
+
+
+# ---------------------------------------------------------------------------
+# TuningDB lock-timeout degradation
+# ---------------------------------------------------------------------------
+
+class TestTuningLockTimeout:
+    def test_wedged_lock_degrades_to_in_memory(self, tmp_path):
+        db = TuningDB(tmp_path / "t.json", lock_timeout=0.2)
+        assert db.put("k0", {"v": 0})
+        gen = db.generation()
+        with hold_tuning_db_lock(db):
+            with pytest.warns(UserWarning, match="in-memory"):
+                ok = db.put("k1", {"v": 1})
+            assert not ok
+            # degraded, not lost: this handle still reads the record,
+            # and cached autotune plans re-resolve (generation bumped)
+            assert db.get("k1") == {"v": 1}
+            assert db.generation() == gen + 1
+            on_disk = json.loads((tmp_path / "t.json").read_text())
+            assert "k1" not in on_disk["entries"]
+        # holder gone: the next successful put flushes the overlay
+        assert db.put("k2", {"v": 2})
+        on_disk = json.loads((tmp_path / "t.json").read_text())
+        assert set(on_disk["entries"]) == {"k0", "k1", "k2"}
+        assert db._overlay == {}
+
+    def test_corrupt_db_loads_empty_with_warning(self, tmp_path):
+        db = TuningDB(tmp_path / "t.json")
+        db.put("k", {"v": 1})
+        corrupt_tuning_db(db, mode="garbage")
+        with pytest.warns(UserWarning, match="corrupt|unreadable"):
+            assert db.load() == {}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corrupt-leaf fallback
+# ---------------------------------------------------------------------------
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 4)).astype(np.float32),
+            "b": rng.standard_normal((4,)).astype(np.float32)}
+
+
+class TestCheckpointFallback:
+    def test_falls_back_to_next_newest(self, tmp_path):
+        save_checkpoint(tmp_path, 1, _tree(1), {"step": 1})
+        save_checkpoint(tmp_path, 2, _tree(2), {"step": 2})
+        corrupt_checkpoint_leaf(tmp_path, step=2)
+        with pytest.warns(RuntimeWarning,
+                          match="skipping checkpoint step 2"):
+            tree, extra, step = restore_checkpoint(tmp_path, None,
+                                                   _tree(0))
+        assert step == 1 and extra["step"] == 1
+        np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+
+    def test_explicit_step_still_raises(self, tmp_path):
+        save_checkpoint(tmp_path, 1, _tree(1), {})
+        save_checkpoint(tmp_path, 2, _tree(2), {})
+        corrupt_checkpoint_leaf(tmp_path, step=2)
+        with pytest.raises(Exception):
+            restore_checkpoint(tmp_path, 2, _tree(0))
+
+    def test_all_corrupt_raises_ioerror(self, tmp_path):
+        save_checkpoint(tmp_path, 1, _tree(1), {})
+        save_checkpoint(tmp_path, 2, _tree(2), {})
+        corrupt_checkpoint_leaf(tmp_path, step=1)
+        corrupt_checkpoint_leaf(tmp_path, step=2)
+        with pytest.warns(RuntimeWarning):
+            with pytest.raises(IOError, match="unusable"):
+                restore_checkpoint(tmp_path, None, _tree(0))
+
+
+# ---------------------------------------------------------------------------
+# Serving requeue
+# ---------------------------------------------------------------------------
+
+class TestServingRequeue:
+    def _model(self):
+        import jax
+        from repro.models import ModelConfig, build_model
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                          param_dtype="float32", compute_dtype="float32",
+                          remat=False)
+        model = build_model(cfg)
+        return model, model.init(jax.random.PRNGKey(0))
+
+    def test_requeue_mid_flight_preserves_outputs(self):
+        model, params = self._model()
+        prompts = [[1, 2, 3], [10, 11], [5, 6, 7, 8], [20]]
+        max_news = [4, 6, 3, 5]
+
+        ref = ContinuousBatcher(model, params, max_batch=2, max_seq=48)
+        for i, (p, m) in enumerate(zip(prompts, max_news)):
+            ref.submit(Request(i, list(p), m))
+        expect = ref.run()
+
+        b = ContinuousBatcher(model, params, max_batch=2, max_seq=48)
+        for i, (p, m) in enumerate(zip(prompts, max_news)):
+            b.submit(Request(i, list(p), m))
+        # a device dies mid-serve: some requests finished, some in-flight
+        for _ in range(6):
+            b.step()
+        pend_before = b.pending
+        inflight = sum(s is not None for s in b.slots)
+        n = b.rebuild()                 # requeue + fresh caches
+        assert n == inflight
+        assert b.pending == pend_before     # nothing dropped
+        done = b.run()
+        assert done == expect
+
+    def test_double_requeue_does_not_refold(self):
+        model, params = self._model()
+        ref = ContinuousBatcher(model, params, max_batch=1, max_seq=48)
+        ref.submit(Request(0, [1, 2], 6))
+        expect = ref.run()
+
+        b = ContinuousBatcher(model, params, max_batch=1, max_seq=48)
+        b.submit(Request(0, [1, 2], 6))
+        for _ in range(4):
+            b.step()
+        b.rebuild()
+        for _ in range(3):
+            b.step()
+        b.rebuild()
+        done = b.run()
+        assert done == expect

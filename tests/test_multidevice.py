@@ -112,6 +112,21 @@ def test_elastic_restore():
 
 
 @pytest.mark.slow
+def test_elastic_rebuild_12dev():
+    # Elastic rebuild acceptance: injected device loss is detected by the
+    # watchdog policy, TorusComm.rebuild re-factorizes the survivors into
+    # a valid d-factor torus with bit-exact resumed all-to-all (plan-LRU
+    # slice invalidated, tuning winners migrated), and the elastic
+    # trainer recovers through checkpoint restore onto the survivor mesh
+    # with params identical to a direct-restore reference.
+    out = run_device_script("check_rebuild.py", devices=12)
+    assert "OK rebuild: (3,4) -> (2,4) survivor torus" in out
+    assert "1 tuning record migrated" in out
+    assert "OK elastic trainer: device loss at step 8" in out
+    assert "OK rebuild: detect -> degrade -> rebuild -> resume" in out
+
+
+@pytest.mark.slow
 def test_pipeline_parallel():
     out = run_device_script("check_pipeline.py", devices=4)
     assert "pipeline gradients == sequential" in out
