@@ -28,6 +28,15 @@ rows, counts are a fixed non-uniform matrix, and the recorded ``seconds``
 covers the counts phase plus the bucket-padded data rounds — with the
 achieved ``occupancy`` (useful rows / bucketed rows) alongside.
 
+The ``sparse[d=2]`` column measures the sparse-neighborhood Alltoallv
+(core.sparse) on the same d=2 factorization: counts are the same
+per-pair bound but only a ~10% random subset of pairs is non-zero, so
+the plan's per-round neighborhoods skip the all-empty combined messages
+— recorded alongside as ``density`` / ``skipped_exchanges`` /
+``combined_messages`` (from the plan's host-side ``analyze``).  Compare
+against ``ragged[d=2]`` at the same ``block_elems`` for the measured
+dense<->sparse crossover the density-aware tuner models.
+
 The ``allgather[d=2]`` column measures the dimension-wise gather family
 (``comm.all_gather``): ``block_elems`` int32 elements contributed per
 rank, exchanged as d per-axis stages on the same cached communicator —
@@ -173,6 +182,76 @@ def bench_ragged_plan_construction(mesh, names, max_count):
     return cold, cached
 
 
+SPARSE_DENSITY = 0.1
+
+
+def bench_sparse(p_procs, rows):
+    """The sparse-neighborhood (Alltoallv) column: message-combining
+    execution on the d=2 factorization with a ~``SPARSE_DENSITY``
+    fraction of non-zero pairs.
+
+    Same protocol as ``bench_ragged`` (``block_elems`` = per-pair
+    ``max_count`` of int32 rows, power-of-two bucket), but the fixed
+    pseudo-random count matrix is sparse, so whole per-round combined
+    messages are empty and the plan skips them — ``seconds`` is the
+    counts phase plus only the non-empty data lanes, the end-to-end
+    price ``tuning.predict_sparse`` models.  The achieved ``density``
+    and the skip counters come from the plan's host-side ``analyze``."""
+    dims = dims_create(p_procs, 2)
+    names = tuple(f"t{i}" for i in range(len(dims)))
+    mesh = cart_create(p_procs, tuple(reversed(dims)), names)
+    comm = torus_comm(mesh, names)
+    rng = np.random.default_rng(0)
+    for nelem in ELEMENTS:
+        plan = comm.sparse_all_to_all((), jnp.int32, max_count=nelem,
+                                      density=SPARSE_DENSITY)
+        counts_np = (rng.integers(1, nelem + 1, size=(p_procs, p_procs))
+                     * (rng.random((p_procs, p_procs)) < SPARSE_DENSITY))
+        counts = jnp.asarray(counts_np, jnp.int32)
+        x = jnp.ones((p_procs, p_procs, plan.bucket), jnp.int32)
+        fn = plan.host_fn()
+        sec = bench(lambda x: fn(x, counts), x)
+        cold, cached = bench_sparse_plan_construction(mesh, names, nelem)
+        stats = plan.analyze(np.asarray(counts_np))
+        rows.append({"impl": "sparse[d=2]", "dims": list(dims),
+                     "block_elems": nelem, "seconds": sec,
+                     "bucket": plan.bucket,
+                     "density": stats["density"],
+                     "skipped_exchanges": stats["skipped_exchanges"],
+                     "combined_messages": stats["combined_messages"],
+                     "plan_cold_us": cold * 1e6,
+                     "plan_cached_us": cached * 1e6,
+                     "plan": plan.describe()})
+        print(f"alltoall_cmp,sparse[d=2],{nelem},{sec * 1e6:.1f},"
+              f"bucket={plan.bucket},density={stats['density']:.3f},"
+              f"skipped={stats['skipped_exchanges']},"
+              f"plan_cold={cold * 1e6:.1f}us,"
+              f"plan_cached={cached * 1e6:.2f}us")
+
+
+def bench_sparse_plan_construction(mesh, names, max_count):
+    """Sparse analogue of ``bench_ragged_plan_construction``: cold
+    resolves the comm, the counts plan, the per-round message masks and
+    the cost model; cached is the LRU fetch of the SparseA2APlan."""
+    kw = dict(row_shape=(), dtype=jnp.int32, max_count=max_count,
+              density=SPARSE_DENSITY)
+    cold = float("inf")
+    for _ in range(8):
+        free_comms()
+        free_plans()
+        free_all()
+        t0 = time.perf_counter()
+        torus_comm(mesh, names).sparse_all_to_all(**kw)
+        cold = min(cold, time.perf_counter() - t0)
+    cached = float("inf")
+    for _ in range(8):
+        t0 = time.perf_counter()
+        for _ in range(PLAN_REPS):
+            torus_comm(mesh, names).sparse_all_to_all(**kw)
+        cached = min(cached, (time.perf_counter() - t0) / PLAN_REPS)
+    return cold, cached
+
+
 def bench_allgather(p_procs, rows):
     """The dimension-wise gather-family column: ``comm.all_gather`` on
     the d=2 factorization.  ``block_elems`` int32 elements are
@@ -281,6 +360,7 @@ def main(argv=None):
 
     bench_allgather(p_procs, rows)
     bench_ragged(p_procs, rows)
+    bench_sparse(p_procs, rows)
     bench_autotune(p_procs, rows)
 
     stats = plan_cache_stats()

@@ -1,0 +1,143 @@
+"""Per-PR perf-trajectory baseline: dense vs ragged vs sparse Alltoallv.
+
+Writes ``benchmarks/artifacts/BENCH_<n>.json`` — a small, committed
+regression baseline recording the measured microseconds of the three
+bucketed exchange backends at three router densities (sparse regime,
+mid, fully dense) on the d=2 factorization.  The *committed* file is the
+baseline from the PR that introduced the sparse subsystem; the CI
+bench-smoke job regenerates a fresh copy per run and uploads it as a
+workflow artifact so the dense<->sparse crossover can be tracked across
+PRs without gating on absolute timings (CI runners are too noisy for
+thresholds — the artifact is the trajectory, the schema check is the
+gate).
+
+Columns per density:
+
+* ``dense_us``  — the dense factorized all-to-all moving the same
+  ``(p, p, bucket)`` padded buffer (what capacity-padded MoE pays);
+* ``ragged_us`` — the bucketed ragged Alltoallv (counts phase + dense
+  data rounds), ``core.ragged``;
+* ``sparse_us`` — the sparse-neighborhood Alltoallv (counts phase +
+  only the non-empty combined messages), ``core.sparse`` — plus its
+  oracle-derived ``skip_fraction`` on the measured count matrix.
+
+Run via:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.perf_trajectory [--p 8] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from repro.core import dims_create
+from repro.core.cache import cart_create
+from repro.core.comm import torus_comm
+
+PR = 7
+DENSITIES = (0.05, 0.5, 1.0)
+MAX_COUNT = 256
+WARMUP, REPS = 4, 20
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def _best(fn, *args):
+    for _ in range(WARMUP):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _counts(p, density, rng):
+    """Fixed sparse count matrix: ~density fraction of non-zero pairs,
+    each in [1, MAX_COUNT]; at least one pair stays non-zero so the
+    exchange is never degenerate."""
+    c = (rng.integers(1, MAX_COUNT + 1, size=(p, p))
+         * (rng.random((p, p)) < density))
+    if not c.any():
+        c[0, 0] = MAX_COUNT
+    return c.astype(np.int32)
+
+
+def run(p_procs: int) -> dict:
+    dims = dims_create(p_procs, 2)
+    names = tuple(f"t{i}" for i in range(len(dims)))
+    mesh = cart_create(p_procs, tuple(reversed(dims)), names)
+    comm = torus_comm(mesh, names)
+
+    ragged = comm.ragged_all_to_all((), jnp.int32, max_count=MAX_COUNT)
+    bucket = ragged.bucket
+    dense = comm.all_to_all(block_shape=(bucket,), dtype=jnp.int32,
+                            backend="factorized")
+    x = jnp.ones((p_procs, p_procs, bucket), jnp.int32)
+    dense_fn = dense.host_fn()
+    ragged_fn = ragged.host_fn()
+    dense_us = _best(dense_fn, x) * 1e6
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for density in DENSITIES:
+        sparse = comm.sparse_all_to_all((), jnp.int32, max_count=MAX_COUNT,
+                                        density=density)
+        counts_np = _counts(p_procs, density, rng)
+        counts = jnp.asarray(counts_np)
+        sparse_fn = sparse.host_fn()
+        stats = sparse.analyze(counts_np)
+        row = {
+            "density_requested": density,
+            "density_measured": stats["density"],
+            "dense_us": dense_us,
+            "ragged_us": _best(ragged_fn, x, counts) * 1e6,
+            "sparse_us": _best(sparse_fn, x, counts) * 1e6,
+            "skip_fraction": stats["skip_fraction"],
+            "skipped_exchanges": stats["skipped_exchanges"],
+            "total_exchanges": stats["total_exchanges"],
+        }
+        rows.append(row)
+        print(f"perf_trajectory,rho={density},dense={row['dense_us']:.1f}us,"
+              f"ragged={row['ragged_us']:.1f}us,"
+              f"sparse={row['sparse_us']:.1f}us,"
+              f"skip={row['skip_fraction']:.3f}")
+    return {"pr": PR, "p": p_procs, "dims": list(dims),
+            "max_count": MAX_COUNT, "bucket": bucket, "dtype": "int32",
+            "warmup": WARMUP, "repeats": REPS, "densities": rows}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--p", type=int, default=8,
+                    help="process (device) count; CI smoke uses 8")
+    ap.add_argument("--out", type=Path,
+                    default=ARTIFACTS / f"BENCH_{PR}.json",
+                    help="artifact path (CI writes outside the tree so "
+                         "the committed baseline stays put)")
+    args = ap.parse_args(argv)
+    if jax.device_count() < args.p:
+        print(f"need {args.p} devices (set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count={args.p})",
+              file=sys.stderr)
+        return 1
+    record = run(args.p)
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(record, indent=1))
+    print(f"perf_trajectory,wrote={args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,11 +25,13 @@ from .cache import (
 from .plan import (
     A2APlan,
     RaggedA2APlan,
+    SparseA2APlan,
     free_plans,
     plan_all_to_all,
     plan_cache_entries,
     plan_cache_stats,
     plan_ragged_all_to_all,
+    plan_sparse_all_to_all,
     set_plan_cache_capacity,
 )
 from .comm import (
@@ -46,14 +48,22 @@ from .ragged import (
     next_pow2,
     torus_rank,
 )
+from .sparse import (
+    round_message_masks,
+    sparse_exact_alltoallv,
+    sparse_traffic_stats,
+)
 from .autotune import (
     TuningDB,
     autotune,
+    autotune_ragged,
     autotune_stats,
     default_db_path,
     fingerprint_digest,
+    lookup_ragged_measured,
     migrate_records,
     plan_db_key,
+    ragged_db_key,
     reset_autotune_stats,
 )
 from .faults import (
@@ -67,6 +77,8 @@ from .faults import (
 )
 from .simulator import (
     PAPER_EXAMPLES,
+    SparseVolumeCount,
+    check_correct_sparse_alltoallv,
     example_index_table,
     round_datatype,
     simulate_direct_alltoall,
@@ -75,6 +87,7 @@ from .simulator import (
     simulate_factorized_alltoall,
     simulate_factorized_alltoallv,
     simulate_factorized_reduce_scatter,
+    simulate_sparse_alltoallv,
 )
 from .tuning import (
     DCN,
@@ -90,6 +103,7 @@ from .tuning import (
     predict_overlapped,
     predict_ragged,
     predict_reduce_scatter,
+    predict_sparse,
 )
 from .guidelines import Measurement, Violation, check_guidelines, format_report
 from .hlo_inspect import collective_bytes_of, interleave_report, parse_hlo
@@ -104,9 +118,11 @@ from .overlap import (
 __all__ = [
     "A2APlan", "AllGatherPlan", "DCN", "ICI", "LinkModel", "Measurement",
     "PAPER_EXAMPLES", "RaggedA2APlan", "ReduceScatterPlan", "Schedule",
-    "TorusComm", "TorusFactorization", "TuningDB",
+    "SparseA2APlan", "SparseVolumeCount", "TorusComm",
+    "TorusFactorization", "TuningDB", "check_correct_sparse_alltoallv",
     "DeviceLossError", "FaultError", "FaultInjector", "FaultSpec",
-    "Violation", "autotune", "autotune_stats", "bucket_occupancy",
+    "Violation", "autotune", "autotune_ragged", "autotune_stats",
+    "bucket_occupancy",
     "cache_stats", "cart_create", "check_guidelines", "choose_algorithm",
     "choose_chunks", "choose_dimwise_algorithm", "choose_ragged_algorithm",
     "collective_bytes_of", "corrupt_checkpoint_leaf", "corrupt_tuning_db",
@@ -116,17 +132,22 @@ __all__ = [
     "factorized_all_to_all_tiled", "fingerprint_digest", "format_report",
     "free", "free_all",
     "free_comms", "free_plans", "get_factorization", "hold_tuning_db_lock",
-    "host_alltoall", "migrate_records",
+    "host_alltoall", "lookup_ragged_measured", "migrate_records",
     "interleave_report", "max_dims", "next_pow2", "overlapped_all_to_all",
     "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
     "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",
     "plan_cache_stats", "plan_db_key", "plan_ragged_all_to_all",
+    "plan_sparse_all_to_all",
     "predict_allgather", "predict_overlapped", "predict_ragged",
-    "predict_reduce_scatter", "prime_factorization",
-    "reset_autotune_stats", "round_datatype", "run_pipelined",
+    "predict_reduce_scatter", "predict_sparse", "prime_factorization",
+    "ragged_db_key",
+    "reset_autotune_stats", "round_datatype", "round_message_masks",
+    "run_pipelined",
     "set_cache_capacity", "set_plan_cache_capacity",
     "simulate_direct_alltoall", "simulate_direct_alltoallv",
     "simulate_factorized_allgather", "simulate_factorized_alltoall",
     "simulate_factorized_alltoallv", "simulate_factorized_reduce_scatter",
+    "simulate_sparse_alltoallv", "sparse_exact_alltoallv",
+    "sparse_traffic_stats",
     "torus_comm", "torus_rank", "unified_stats",
 ]

@@ -77,6 +77,12 @@ DB_VERSION = 1
 # record is allowed to request at plan-build time).
 MEASURED_BACKENDS = ("direct", "factorized", "overlap")
 
+# Backends the ragged-family measured search (``autotune_ragged``) may
+# record as a winner: the dense-bucketed ragged executor vs the
+# sparse-neighborhood one.  Sparse must *win on measured time* to be
+# recorded — there is no analytic shortcut into a measured record.
+RAGGED_MEASURED_BACKENDS = ("ragged", "sparse")
+
 
 # ---------------------------------------------------------------------------
 # The persistent tuning database
@@ -337,6 +343,26 @@ def plan_db_key(dev_key, dims, axis_names, block_shape, dtype,
             f"|dtype:{jnp.dtype(dtype).name}|variant:{variant}")
 
 
+def ragged_db_key(dev_key, dims, axis_names, row_shape, dtype,
+                  max_count: int, variant: str, density: float) -> str:
+    """Stable DB key for the ragged-vs-sparse measured choice.
+
+    Extends :func:`plan_db_key`'s identity with the ragged bucket bound
+    and a coarse density bucket (one decade per bucket: 1.0, 0.1, 0.01,
+    ...) — the dense<->sparse crossover moves with orders of magnitude
+    of occupancy, not percents, and a finer key would fragment the DB.
+    """
+    fp = fingerprint_digest(dev_key)
+    row = "x".join(str(int(s)) for s in row_shape) or "scalar"
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    decade = min(6, max(0, -int(math.floor(math.log10(density)))))
+    return (f"ragged|fp:{fp}|dims:{','.join(str(int(s)) for s in dims)}"
+            f"|axes:{','.join(axis_names)}|row:{row}"
+            f"|dtype:{jnp.dtype(dtype).name}|max:{int(max_count)}"
+            f"|variant:{variant}|rho:1e-{decade}")
+
+
 def _valid_record(rec) -> bool:
     if not isinstance(rec, dict):
         return False
@@ -360,6 +386,37 @@ def lookup_measured(dev_key, dims, axis_names, block_shape, dtype,
     if rec is not None and not _valid_record(rec):
         warnings.warn(f"ignoring malformed tuning record in {db.path}",
                       stacklevel=2)
+        rec = None
+    if rec is None:
+        _STATS["db_misses"] += 1
+    else:
+        _STATS["db_hits"] += 1
+    return rec
+
+
+def _valid_ragged_record(rec) -> bool:
+    if not isinstance(rec, dict):
+        return False
+    w = rec.get("winner")
+    return (isinstance(w, dict)
+            and w.get("backend") in RAGGED_MEASURED_BACKENDS)
+
+
+def lookup_ragged_measured(dev_key, dims, axis_names, row_shape, dtype,
+                           max_count: int, variant: str, density: float,
+                           db: TuningDB | None = None) -> dict | None:
+    """The consumption side of :func:`autotune_ragged`: a validated
+    ragged-vs-sparse record or None.  Same hit/miss accounting and
+    malformed-record tolerance as :func:`lookup_measured` — a miss means
+    the caller falls back to the analytic density-aware policy
+    (``tuning.choose_ragged_algorithm``), never a blocking measurement.
+    """
+    db = db if db is not None else get_default_db()
+    rec = db.get(ragged_db_key(dev_key, dims, axis_names, row_shape, dtype,
+                               max_count, variant, density))
+    if rec is not None and not _valid_ragged_record(rec):
+        warnings.warn(f"ignoring malformed ragged tuning record in "
+                      f"{db.path}", stacklevel=2)
         rec = None
     if rec is None:
         _STATS["db_misses"] += 1
@@ -662,3 +719,87 @@ def autotune(mesh: Mesh, axis_names, block_shape, dtype, *,
     # object later backend="autotune" callers fetch (tuned_from="measured").
     return plan_all_to_all(mesh, axes, block_shape, dtype,
                            backend="autotune", variant=variant, db=db)
+
+
+def _sparse_counts_operand(p: int, max_count: int, density: float,
+                           seed: int = 0):
+    """Deterministic global (p, p) int32 count matrix at roughly the
+    requested non-zero density (at least one non-zero pair, so the
+    operand always exercises the data rounds)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    counts = (rng.random((p, p)) < density) \
+        * rng.integers(1, max_count + 1, (p, p))
+    counts = counts.astype(np.int32)
+    if not counts.any():
+        counts[0, p - 1] = max_count
+    return jnp.asarray(counts)
+
+
+def autotune_ragged(mesh: Mesh, axis_names, row_shape, dtype, *,
+                    max_count: int, density: float,
+                    avg_count: float | None = None,
+                    variant: str = "natural", warmup: int = 2,
+                    repeats: int = 5, seed: int = 0,
+                    db: TuningDB | None = None, verbose: bool = False):
+    """Measure dense-bucketed ragged vs sparse-neighborhood Alltoallv on
+    a representative sparse operand and persist the winner.
+
+    The two candidates run their jitted ``host_fn`` over the same
+    deterministic ``(p, p, bucket, *row)`` payload and a count matrix
+    drawn at the requested ``density`` — so the sparse backend's skip
+    predicates see realistic emptiness, and it is recorded as the winner
+    **only when it wins on measured time** (the same discipline as the
+    dense autotuner: no analytic shortcut into a measured record).
+    Returns the winning plan; the record is consumed by
+    :func:`lookup_ragged_measured` (e.g. the dropless-MoE plan chooser
+    under ``a2a_backend="autotune"``).
+    """
+    from .comm import torus_comm
+    from .ragged import next_pow2
+
+    axes = _as_tuple(axis_names)
+    dims = tuple(int(mesh.shape[a]) for a in axes)
+    p = math.prod(dims)
+    dev_key = device_fingerprint(mesh)
+    db = db if db is not None else TuningDB()
+    _STATS["searches"] += 1
+
+    row_shape = tuple(int(s) for s in row_shape)
+    max_count = int(max_count)
+    bucket = next_pow2(max_count)
+    counts = _sparse_counts_operand(p, max_count, density, seed)
+    x = _operand(p, (bucket,) + row_shape, dtype)
+
+    comm = torus_comm(mesh, axes, variant=variant, db=db)
+    ragged_plan = comm.ragged_all_to_all(row_shape, dtype,
+                                         max_count=max_count,
+                                         avg_count=avg_count)
+    sparse_plan = comm.sparse_all_to_all(row_shape, dtype,
+                                         max_count=max_count,
+                                         avg_count=avg_count,
+                                         density=density)
+    table = []
+    for backend, plan in (("ragged", ragged_plan), ("sparse", sparse_plan)):
+        fn = plan.host_fn(mesh)
+        med = _timed(lambda _: fn(x, counts), None, warmup=warmup,
+                     repeats=repeats)
+        table.append({"backend": backend, "median_us": med * 1e6})
+        if verbose:
+            print(f"[autotune_ragged] {backend}: {med * 1e6:.1f}us")
+
+    win = min(table, key=lambda r: r["median_us"])
+    record = {
+        "version": DB_VERSION,
+        "winner": {"backend": win["backend"],
+                   "median_us": win["median_us"]},
+        "p": p, "dims": list(dims), "axis_names": list(axes),
+        "row_shape": list(row_shape), "dtype": jnp.dtype(dtype).name,
+        "max_count": max_count, "bucket": bucket, "variant": variant,
+        "density": float(density), "table": table,
+        "warmup": warmup, "repeats": repeats, "seed": seed,
+        "created": time.time(),
+    }
+    db.put(ragged_db_key(dev_key, dims, axes, row_shape, dtype, max_count,
+                         variant, density), record)
+    return sparse_plan if win["backend"] == "sparse" else ragged_plan

@@ -569,6 +569,22 @@ class TorusComm:
             compute_seconds=compute_seconds,
             db=self._db if db is None else db))
 
+    def sparse_all_to_all(self, row_shape=(), dtype="float32", *,
+                          max_count: int, avg_count: float | None = None,
+                          density: float | None = None, round_order=None,
+                          reverse_round_order=None, links=None):
+        """Build (or fetch) the :class:`~repro.core.plan.SparseA2APlan`
+        (message-combining sparse-neighborhood Alltoallv): the ragged
+        counts phase plus skippable per-peer lanes per dimension-wise
+        round — see :func:`~repro.core.plan.plan_sparse_all_to_all` for
+        the knobs (``density`` is the expected non-zero fraction of the
+        count matrix)."""
+        return self._note(_planmod._build_sparse_plan(
+            self._source, self.axis_names, row_shape, dtype,
+            max_count=max_count, avg_count=avg_count, density=density,
+            variant=self.variant, round_order=round_order,
+            reverse_round_order=reverse_round_order, links=links))
+
     def all_gather(self, block_shape=None, dtype=None, *,
                    backend: str = "tuned", round_order=None,
                    n_chunks: int = 1, links=None) -> AllGatherPlan:

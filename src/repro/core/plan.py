@@ -275,9 +275,12 @@ class A2APlan:
 
 
 def _sub_plans(plan) -> tuple:
-    """Nested dense plans a composite plan owns (ragged: data + counts)."""
+    """Nested dense plans a composite plan owns (ragged: data + counts;
+    sparse: counts only — its data rounds are its own kernel)."""
     if isinstance(plan, RaggedA2APlan):
         return (plan.data, plan.counts_plan)
+    if isinstance(plan, SparseA2APlan):
+        return (plan.counts_plan,)
     return ()
 
 
@@ -864,6 +867,345 @@ def _build_ragged_plan(mesh_or_axis_dims, axis_names, row_shape=(),
     plan = RaggedA2APlan(data, counts, max_count=max_count, avg_count=avg,
                          row_shape=row_shape, dtype=dtype,
                          predicted_seconds=predicted)
+    return _registry_store(key, plan)
+
+
+# ---------------------------------------------------------------------------
+# Sparse neighborhood (message-combining) Alltoallv plans
+# ---------------------------------------------------------------------------
+
+
+class SparseA2APlan:
+    """A resolved, reusable sparse-neighborhood Alltoallv plan.
+
+    Construct via :func:`plan_sparse_all_to_all` (or
+    ``TorusComm.sparse_all_to_all``); never directly.  The sparse family
+    (``core.sparse``) keeps the ragged subsystem's counts phase and
+    bucket contract but replaces the dense data rounds with
+    message-combined, *skippable* per-peer lanes: each dimension-wise
+    round decomposes into its ``D[k] - 1`` peer exchanges, and a lane
+    whose combined payload is empty — determined from the replicated
+    counts matrix against the plan-time ``round_message_masks`` — is
+    skipped identically on every device (SPMD-safe ``lax.cond``).
+
+    The execution surface duck-types :class:`RaggedA2APlan`'s
+    ``forward``/``reverse`` (``(x, send_counts) -> (recv, recv_counts)``)
+    so callers like the dropless MoE path can swap plans without code
+    changes; the window contract is relaxed — rows beyond
+    ``recv_counts[i]`` are unspecified (see ``core.sparse``).
+    """
+
+    def __init__(self, fact: TorusFactorization, counts: A2APlan, *,
+                 max_count: int, avg_count: float, expected_density: float,
+                 row_shape: tuple[int, ...], dtype, order: tuple[int, ...],
+                 rev_order: tuple[int, ...], masks_fwd, masks_rev,
+                 links: tuple[LinkModel, ...],
+                 predicted_seconds: float | None, mesh: Mesh | None):
+        self.fact = fact
+        self.counts_plan = counts
+        self.max_count = max_count
+        self.avg_count = avg_count
+        self.expected_density = expected_density
+        self.row_shape = row_shape
+        self.dtype = dtype
+        self.order = order
+        self.rev_order = rev_order
+        self._masks_fwd = masks_fwd
+        self._masks_rev = masks_rev
+        self.links = links
+        self.predicted_seconds = predicted_seconds
+        # Traffic stats of the last host-side analyze()/exact() call
+        # (density, skipped/combined messages, skipped rounds) — the jit
+        # path never materializes them; None until first analysis.
+        self.last_stats: dict | None = None
+        self._mesh = mesh
+        self._from_cache = False
+        self._fetches = 1
+        self._host_fns: dict[Mesh, object] = {}
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self.fact.axis_names
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.fact.dims
+
+    @property
+    def p(self) -> int:
+        return self.fact.p
+
+    @property
+    def d(self) -> int:
+        return self.fact.d
+
+    @property
+    def variant(self) -> str:
+        return self.fact.variant
+
+    @property
+    def backend(self) -> str:
+        return "sparse"
+
+    @property
+    def bucket(self) -> int:
+        from .ragged import next_pow2
+        return next_pow2(self.max_count)
+
+    @property
+    def round_order(self) -> tuple[int, ...]:
+        return self.order
+
+    @property
+    def reverse_round_order(self) -> tuple[int, ...]:
+        return self.rev_order
+
+    @property
+    def row_bytes(self) -> int:
+        return math.prod(self.row_shape) * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def expected_occupancy(self) -> float:
+        return float(self.avg_count) / float(self.bucket)
+
+    # -- execution surface (inside shard_map) ------------------------------
+
+    def counts_matrix(self, send_counts):
+        """The counts phase alone: ``(p,)`` int32 send counts -> the full
+        ``(p, p)`` matrix, identical on every device."""
+        from .ragged import _counts_matrix_impl
+        return _counts_matrix_impl(send_counts, self.counts_plan)
+
+    def forward(self, x, send_counts):
+        """Bucketed sparse all-to-all: same signature and return
+        convention as :meth:`RaggedA2APlan.forward`, with empty per-peer
+        lanes skipped; rows beyond ``recv_counts[i]`` are unspecified."""
+        from .sparse import _sparse_bucketed_impl
+        return _sparse_bucketed_impl(x, send_counts, plan=self)
+
+    def reverse(self, x, send_counts):
+        """The combine-direction sparse exchange (drain round order)."""
+        from .sparse import _sparse_bucketed_impl
+        return _sparse_bucketed_impl(x, send_counts, plan=self,
+                                     reverse=True)
+
+    def occupancy(self, send_counts):
+        """Measured occupancy of one call (traced scalar): useful rows
+        over ``p * bucket`` padded rows."""
+        from .ragged import bucket_occupancy
+        return bucket_occupancy(send_counts, self.bucket)
+
+    # -- host-level paths --------------------------------------------------
+
+    def _full_order(self, order) -> list[int]:
+        active = [i for i, Dk in enumerate(self.dims) if Dk > 1]
+        trivial = [i for i, Dk in enumerate(self.dims) if Dk == 1]
+        return [active[k] for k in order] + trivial
+
+    def analyze(self, counts) -> dict:
+        """Host-side traffic analysis of a concrete ``(p, p)`` count
+        matrix via the simulator's sparse oracle: density, per-message
+        skip accounting, whole skipped rounds.  Caches the result on the
+        plan (surfaced by :meth:`describe` and the dry-run artifacts)."""
+        from .sparse import sparse_traffic_stats
+        self.last_stats = sparse_traffic_stats(
+            self.dims, counts, round_order=self._full_order(self.order))
+        return self.last_stats
+
+    def exact(self, rows):
+        """The exact sparse host/debug path (``core.sparse
+        .sparse_exact_alltoallv``): global nested ``rows[s][d]`` arrays
+        in, exact per-pair arrays out plus the per-round skip accounting
+        (also cached onto :attr:`last_stats`)."""
+        from .sparse import sparse_exact_alltoallv
+        recv, counts, vol = sparse_exact_alltoallv(
+            rows, self.dims, round_order=self._full_order(self.order))
+        self.analyze(counts)
+        return recv, counts, vol
+
+    def host_fn(self, mesh: Mesh | None = None):
+        """Jitted host-level sparse all-to-all over global ``(p, p,
+        bucket, *row)`` data and ``(p, p)`` int32 counts operands; the
+        benchmark-harness form.  Replication checking is disabled
+        (``check_vma=False``): the skip predicates wrap collectives in
+        ``lax.cond``, which the older shard_map replication checker
+        cannot see through."""
+        mesh = self._mesh if mesh is None else mesh
+        if mesh is None:
+            raise ValueError("plan was built without a Mesh; pass one")
+        if mesh not in self._host_fns:
+            import jax
+            axes = tuple(reversed(self.axis_names))
+            x_spec = P(axes)
+            c_spec = P(axes)
+
+            def local(x, c):    # x: (1, p, bucket, *row); c: (1, p)
+                recv, rc = self.forward(x[0], c[0])
+                return recv[None], rc[None]
+
+            self._host_fns[mesh] = jax.jit(jax.shard_map(
+                local, mesh=mesh, in_specs=(x_spec, c_spec),
+                out_specs=(x_spec, c_spec), check_vma=False))
+        return self._host_fns[mesh]
+
+    # -- introspection -----------------------------------------------------
+
+    def describe(self) -> dict:
+        """Stable, JSON-serializable summary of the resolved sparse plan.
+
+        ``expected_density`` is the plan-time estimate of the non-zero
+        fraction of the count matrix (what the tuner priced); ``density``
+        / ``skipped_rounds`` / ``combined_messages`` /
+        ``skipped_exchanges`` reflect the last host-side
+        :meth:`analyze` / :meth:`exact` call (None before one runs).
+        """
+        stats = self.last_stats or {}
+        return {
+            "kind": "sparse",
+            "axis_names": list(self.axis_names),
+            "dims": list(self.dims),
+            "p": self.p,
+            "d": self.d,
+            "backend": "sparse",
+            "requested_backend": "sparse",
+            "variant": self.variant,
+            "round_order": list(self.order),
+            "reverse_round_order": list(self.rev_order),
+            "n_chunks": 1,
+            "row_shape": list(self.row_shape),
+            "dtype": jnp.dtype(self.dtype).name,
+            "row_bytes": self.row_bytes,
+            "max_count": self.max_count,
+            "avg_count": self.avg_count,
+            "bucket": self.bucket,
+            "expected_occupancy": self.expected_occupancy,
+            "expected_density": self.expected_density,
+            "density": stats.get("density"),
+            "skipped_rounds": stats.get("skipped_rounds"),
+            "combined_messages": stats.get("combined_messages"),
+            "skipped_exchanges": stats.get("skipped_exchanges"),
+            "total_exchanges": stats.get("total_exchanges"),
+            "counts_backend": self.counts_plan.backend,
+            "counts_block_bytes": self.counts_plan.block_bytes,
+            "predicted_seconds": self.predicted_seconds,
+            "blocks_sent_per_device": self.fact.blocks_sent_per_device(),
+            "links": [{"alpha": l.alpha, "bandwidth": l.bandwidth}
+                      for l in self.links],
+            "tuned_from": None,
+            "measured": None,
+            "cache": "hit" if self._from_cache else "miss",
+        }
+
+    def __repr__(self):
+        return (f"SparseA2APlan(dims={self.dims}, axes={self.axis_names}, "
+                f"bucket={self.bucket}, max_count={self.max_count}, "
+                f"expected_density={self.expected_density})")
+
+
+def plan_sparse_all_to_all(mesh_or_axis_dims, axis_names, row_shape=(),
+                           dtype="float32", *, max_count: int,
+                           avg_count: float | None = None,
+                           density: float | None = None,
+                           variant: str = "natural", round_order=None,
+                           reverse_round_order=None,
+                           links=None) -> SparseA2APlan:
+    """Build (or fetch from the LRU registry) a :class:`SparseA2APlan`.
+
+    A thin delegator to ``TorusComm.sparse_all_to_all`` (the comm is the
+    API root).  Args mirror :func:`plan_ragged_all_to_all` minus the
+    backend knobs — the sparse data rounds are one kernel — plus:
+
+      density: expected non-zero fraction of the ``p x p`` count matrix
+        (default 1.0 — i.e. price as if dense).  Feeds
+        ``tuning.predict_sparse`` and the plan key; must be in (0, 1].
+    """
+    from .comm import torus_comm
+    return torus_comm(mesh_or_axis_dims, axis_names,
+                      variant=variant).sparse_all_to_all(
+        row_shape, dtype, max_count=max_count, avg_count=avg_count,
+        density=density, round_order=round_order,
+        reverse_round_order=reverse_round_order, links=links)
+
+
+def _build_sparse_plan(mesh_or_axis_dims, axis_names, row_shape=(),
+                       dtype="float32", *, max_count: int,
+                       avg_count: float | None = None,
+                       density: float | None = None,
+                       variant: str = "natural", round_order=None,
+                       reverse_round_order=None,
+                       links=None) -> SparseA2APlan:
+    """The resolution machinery behind ``TorusComm.sparse_all_to_all``:
+    bucket, counts plan, plan-time message masks, and the shared LRU
+    registry."""
+    axis_names = _as_tuple(axis_names)
+    mesh = None
+    if isinstance(mesh_or_axis_dims, Mesh):
+        mesh = mesh_or_axis_dims
+        fact = get_factorization(mesh, axis_names, variant=variant)
+        dims = fact.dims
+        dev_key = device_fingerprint(mesh)
+    else:
+        dims = tuple(int(s) for s in mesh_or_axis_dims)
+        if len(dims) != len(axis_names):
+            raise ValueError(f"{len(dims)} dims for {len(axis_names)} axes")
+        fact = TorusFactorization(axis_names, dims, variant)
+        dev_key = None
+    if variant not in ("natural", "paper"):
+        raise ValueError(f"unknown variant {variant!r}")
+
+    from .ragged import next_pow2
+    max_count = int(max_count)
+    bucket = next_pow2(max_count)
+    avg = float(max_count if avg_count is None else avg_count)
+    if not 0.0 < avg <= bucket:
+        raise ValueError(f"avg_count {avg} outside (0, bucket={bucket}]")
+    rho = float(1.0 if density is None else density)
+    if not 0.0 < rho <= 1.0:
+        raise ValueError(f"density {rho} outside (0, 1]")
+    row_shape = tuple(int(s) for s in row_shape)
+    p = math.prod(dims)
+
+    _, active = _skip_trivial(axis_names, dims)
+    d_active = len(active)
+    order = _check_order(round_order, d_active)
+    rev_order = (tuple(reversed(order)) if reverse_round_order is None
+                 else _check_order(reverse_round_order, d_active))
+
+    links_key = None if links is None else resolve_links(links, dims)
+    key = ("sparse", dev_key, dims, axis_names, row_shape,
+           jnp.dtype(dtype).name, max_count, avg, rho, variant, order,
+           rev_order, links_key)
+    cached = _registry_fetch(key)
+    if cached is not None:
+        return cached
+
+    # Same counts-plan resolution as the ragged family, so a ragged and a
+    # sparse plan over one torus share the registry entry.
+    counts = _build_dense_plan(mesh_or_axis_dims, axis_names, (p,),
+                               jnp.int32, backend="tuned", variant=variant,
+                               round_order=round_order,
+                               reverse_round_order=reverse_round_order,
+                               max_chunks=1, links=links)
+
+    from .sparse import round_message_masks
+    masks_fwd = round_message_masks(active, order)
+    masks_rev = masks_fwd if rev_order == order \
+        else round_message_masks(active, rev_order)
+
+    from .tuning import predict_sparse
+    link_models = resolve_links(links, dims, axis_names)
+    row_bytes = math.prod(row_shape) * jnp.dtype(dtype).itemsize
+    predicted = predict_sparse(dims, link_models, float(row_bytes), bucket,
+                               p, density=rho)
+
+    plan = SparseA2APlan(fact, counts, max_count=max_count, avg_count=avg,
+                         expected_density=rho, row_shape=row_shape,
+                         dtype=dtype, order=order, rev_order=rev_order,
+                         masks_fwd=masks_fwd, masks_rev=masks_rev,
+                         links=link_models, predicted_seconds=predicted,
+                         mesh=mesh)
     return _registry_store(key, plan)
 
 

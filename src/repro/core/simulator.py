@@ -294,6 +294,144 @@ def simulate_direct_alltoallv(counts) -> dict[int, list]:
             for r in range(p)}
 
 
+# ----------------------------------------------------------------------------
+# Sparse (neighborhood) Alltoallv oracle.
+#
+# The second half of Träff et al.'s isomorphic-collectives observation:
+# because round k's composite message to a peer is a fixed *slot set*
+# whose contents are never inspected, the per-round neighborhood of
+# non-empty exchanges is fully determined by the initial count matrix —
+# a message whose slots all carry zero-count pairs can be skipped
+# entirely without changing any delivered payload.  The oracle below
+# runs the identical slot movement as ``simulate_factorized_alltoallv``
+# but elides empty composite messages from the send schedule, counting
+# what was combined and what was skipped; it is the correctness and
+# stats reference for ``core.sparse`` (the jit kernel's skip masks, the
+# exact sparse host mode, and ``SparseA2APlan.analyze``).
+# ----------------------------------------------------------------------------
+
+
+@dataclass
+class SparseVolumeCount:
+    """Per-round *message* bookkeeping for the sparse algorithm.
+
+    Round ``k`` has ``p * (D[k] - 1)`` potential peer exchanges (every
+    rank sends one composite message to each of its ``D[k] - 1``
+    dimension-``k`` group peers; self-slots never cross a link).  An
+    exchange whose combined payload is empty — every slot it would move
+    carries a zero-count pair — is *skipped*; the rest are the
+    *combined messages* actually sent.
+    """
+
+    dims: tuple[int, ...]
+    exchanges_per_round: list[int] = field(default_factory=list)
+    skipped_per_round: list[int] = field(default_factory=list)
+    elements_sent_per_round: list[int] = field(default_factory=list)
+
+    @property
+    def total_exchanges(self) -> int:
+        return sum(self.exchanges_per_round)
+
+    @property
+    def skipped_exchanges(self) -> int:
+        return sum(self.skipped_per_round)
+
+    @property
+    def combined_messages(self) -> int:
+        return self.total_exchanges - self.skipped_exchanges
+
+    @property
+    def skipped_rounds(self) -> int:
+        """Rounds whose every peer exchange was empty (the whole round
+        could be elided)."""
+        return sum(1 for e, s in zip(self.exchanges_per_round,
+                                     self.skipped_per_round)
+                   if e > 0 and s == e)
+
+    @property
+    def skip_fraction(self) -> float:
+        t = self.total_exchanges
+        return self.skipped_exchanges / t if t else 0.0
+
+    @property
+    def total_elements_sent(self) -> int:
+        return sum(self.elements_sent_per_round)
+
+
+def simulate_sparse_alltoallv(
+    dims: tuple[int, ...],
+    counts,
+    round_order: tuple[int, ...] | None = None,
+) -> tuple[dict[int, list], SparseVolumeCount]:
+    """Run Algorithm 1 with sparse-Alltoallv semantics for every rank.
+
+    Identical slot movement and payload convention to
+    :func:`simulate_factorized_alltoallv`, but each per-round composite
+    message is first sized from the slots it would carry: empty messages
+    are skipped (the receiver's slots materialize as the zero-length
+    payloads the count matrix already implies), non-empty ones are
+    counted as combined messages.  Correct iff the final buffers equal
+    :func:`simulate_direct_alltoallv` — skipping may only ever elide
+    messages that carry nothing.
+    """
+    d = len(dims)
+    p = math.prod(dims)
+    counts = _counts_matrix(counts, p)
+    order = tuple(round_order) if round_order is not None else tuple(range(d))
+    assert sorted(order) == list(range(d))
+
+    buf = {r: [[(r, b, j) for j in range(counts[r][b])] for b in range(p)]
+           for r in range(p)}
+    vol = SparseVolumeCount(dims)
+    coords = {r: rank_to_coords(r, dims) for r in range(p)}
+
+    for k in order:
+        positions, extent = round_datatype(dims, k)
+        Dk = dims[k]
+        groups: dict[tuple, list[int]] = {}
+        for r in range(p):
+            key = tuple(c for i, c in enumerate(coords[r]) if i != k)
+            groups.setdefault(key, []).append(r)
+        exchanges = skipped = elems = 0
+        staged = {}
+        for members in groups.values():
+            members.sort(key=lambda r: coords[r][k])
+            assert len(members) == Dk
+            for g_r, r in enumerate(members):
+                newbuf = [None] * p
+                for g_s, s in enumerate(members):
+                    slots = [buf[s][pos + g_r * extent]
+                             for pos in positions]
+                    if g_s != g_r:
+                        exchanges += 1
+                        payload = sum(len(sl) for sl in slots)
+                        if payload == 0:
+                            # the skipped message: no slot crosses the
+                            # link; the receiver's slots are the empty
+                            # payloads the counts already promised
+                            skipped += 1
+                            slots = [[] for _ in positions]
+                        else:
+                            elems += payload
+                    for pos, sl in zip(positions, slots):
+                        newbuf[pos + g_s * extent] = sl
+                staged[r] = newbuf
+        for r, newbuf in staged.items():
+            buf[r] = newbuf
+        vol.exchanges_per_round.append(exchanges)
+        vol.skipped_per_round.append(skipped)
+        vol.elements_sent_per_round.append(elems)
+
+    return buf, vol
+
+
+def check_correct_sparse_alltoallv(dims, counts, round_order=None) -> bool:
+    final, _ = simulate_sparse_alltoallv(dims, counts, round_order)
+    want = simulate_direct_alltoallv(counts)
+    p = math.prod(dims)
+    return all(final[r] == want[r] for r in range(p))
+
+
 def check_correct_alltoallv(dims, counts, round_order=None) -> bool:
     final, _ = simulate_factorized_alltoallv(dims, counts, round_order)
     want = simulate_direct_alltoallv(counts)

@@ -195,9 +195,50 @@ def predict_ragged(dims, links, row_bytes: float, bucket: int, p: int, *,
     return t_counts + t_data
 
 
+# Per-lane startup multiplier for the sparse rounds: decomposing a dense
+# round into D[k]-1 guarded peer lanes (slice + ppermute + predicate per
+# lane instead of one fused all-to-all) costs extra per-message overhead,
+# which is what keeps dense-bucketed the winner at high occupancy.
+SPARSE_LANE_OVERHEAD = 2.0
+
+
+def predict_sparse(dims, links, row_bytes: float, bucket: int, p: int, *,
+                   density: float, counts_bytes: int = 4,
+                   compute_seconds: float = 0.0) -> float:
+    """Alpha-beta prediction for the sparse-neighborhood Alltoallv.
+
+    Same two phases as :func:`predict_ragged` — the dense int32 counts
+    all-to-all, then the data rounds at the padded ``bucket * row_bytes``
+    window — but round ``k``'s per-peer lane is *skippable*: under an
+    i.i.d. non-zero-pair ``density`` (the non-zero fraction of the
+    ``p x p`` count matrix), a composite message combining ``p / D[k]``
+    windows is non-empty with probability ``1 - (1 - density)^(p/D[k])``,
+    and only non-empty lanes pay the bandwidth term.  Every lane pays the
+    (inflated, ``SPARSE_LANE_OVERHEAD``x) startup term — the predicate
+    itself is evaluated everywhere — so at ``density -> 1`` sparse is
+    strictly dense-ragged plus lane overhead and the tuner keeps the
+    dense bucketed path; the win appears once message combining leaves
+    most lanes empty.
+    """
+    links = per_axis_links(links, len(dims))
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    t = predict_factorized(dims, links, p * float(counts_bytes), p)
+    padded = float(bucket) * float(row_bytes)
+    for Dk, link in zip(dims, links):
+        if Dk == 1:
+            continue
+        m = p // Dk                         # windows combined per message
+        p_nonempty = 1.0 - (1.0 - density) ** m
+        t += (Dk - 1) * (SPARSE_LANE_OVERHEAD * link.alpha
+                         + p_nonempty * m * padded / link.bandwidth)
+    return t + compute_seconds
+
+
 def choose_ragged_algorithm(axis_dims, axis_links, row_bytes: float,
                             bucket: int, *, max_chunks: int = 1,
-                            compute_seconds: float = 0.0) -> Schedule:
+                            compute_seconds: float = 0.0,
+                            density: float | None = None) -> Schedule:
     """Pick the data-phase backend for a bucketed ragged exchange.
 
     The data rounds are shape-identical to a dense all-to-all of
@@ -209,6 +250,15 @@ def choose_ragged_algorithm(axis_dims, axis_links, row_bytes: float,
     with how ``plan_ragged_all_to_all(backend="tuned")`` resolves both
     sub-plans (``backend="autotune"`` resolves the data phase through the
     measured records keyed by the padded block shape instead).
+
+    When a ``density`` estimate is given (the expected non-zero fraction
+    of the count matrix — e.g. the dropless-MoE router's occupancy
+    proxy), the sparse-neighborhood schedule (:func:`predict_sparse`,
+    priced end to end including its counts phase) joins the candidate
+    set and the returned schedule may have ``kind == "sparse"`` — the
+    dense<->sparse crossover the ROADMAP names.  ``density`` outside
+    (0, 1] raises ``ValueError``; ``None`` keeps the dense-only
+    candidate set.
     """
     axis_links = per_axis_links(axis_links, len(axis_dims))
     p = math.prod(axis_dims)
@@ -218,9 +268,17 @@ def choose_ragged_algorithm(axis_dims, axis_links, row_bytes: float,
                              compute_seconds=compute_seconds)
     t_counts = choose_algorithm(axis_dims, axis_links, p * 4.0,
                                 max_chunks=1).predicted_seconds
-    return Schedule(sched.kind, sched.dims, sched.links,
+    best = Schedule(sched.kind, sched.dims, sched.links,
                     sched.predicted_seconds + t_counts,
                     n_chunks=sched.n_chunks)
+    if density is not None:
+        t_sparse = predict_sparse(axis_dims, axis_links, float(row_bytes),
+                                  bucket, p, density=density,
+                                  compute_seconds=compute_seconds)
+        if t_sparse < best.predicted_seconds:
+            best = Schedule("sparse", tuple(axis_dims), axis_links,
+                            t_sparse, n_chunks=1)
+    return best
 
 
 def slowest_active_link(dims, links) -> LinkModel:

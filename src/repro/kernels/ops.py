@@ -9,7 +9,7 @@ to be enabled with ``impl="pallas"`` on real TPUs.
 Training note: ``attention`` exposes a ``jax.custom_vjp`` whose forward
 may run the Pallas kernel while the backward uses the XLA reference
 gradient (same math, so gradients are exact for the function computed);
-a Pallas backward kernel is a tracked TODO in EXPERIMENTS.md §Perf.
+a Pallas backward kernel is a tracked open item in ROADMAP.md.
 """
 
 from __future__ import annotations

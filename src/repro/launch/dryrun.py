@@ -262,7 +262,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         # record drove the choice, "model" for the analytic default) and
         # the measured candidate table for DB-hit plans.  Ragged plans
         # (dropless MoE, --set capacity_factor=none) appear here too with
-        # kind="ragged".
+        # kind="ragged", sparse-neighborhood plans with kind="sparse".
         "a2a_plans": (new_plans := [pl.describe()
                                     for pl in plan_cache_entries()
                                     if id(pl) not in plans_before]),
@@ -276,6 +276,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
              "expected_occupancy": d["expected_occupancy"],
              "backend": d["backend"], "tuned_from": d["tuned_from"]}
             for d in new_plans if d.get("kind") == "ragged"],
+        # Sparse-neighborhood plans (dropless MoE below the density
+        # crossover): the plan-time density estimate the tuner priced
+        # plus the last analyzed traffic stats (None in a dry run — the
+        # compile-only path never sees a real count matrix).
+        "a2a_sparse": [
+            {"axis_names": d["axis_names"], "bucket": d["bucket"],
+             "max_count": d["max_count"], "avg_count": d["avg_count"],
+             "expected_density": d["expected_density"],
+             "density": d["density"],
+             "skipped_rounds": d["skipped_rounds"],
+             "combined_messages": d["combined_messages"]}
+            for d in new_plans if d.get("kind") == "sparse"],
         "a2a_plan_cache": plan_cache_stats(),
         # Tuning-DB traffic for the cell (delta over the cell, like the
         # a2a_plans snapshot above): under a2a_backend="autotune"

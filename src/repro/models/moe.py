@@ -33,7 +33,10 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
+from repro.core.autotune import lookup_ragged_measured
 from repro.core.comm import torus_comm
+from repro.core.ragged import next_pow2
+from repro.core.tuning import choose_ragged_algorithm, default_links
 from repro.kernels import ops as kops
 from repro.models.common import ParamSpec, silu, gelu
 from repro.parallel.sharding import ShardingRules, constrain, ep_axes, \
@@ -146,13 +149,59 @@ def moe_ragged_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int,
         n_chunks=cfg.a2a_chunks, max_chunks=cfg.a2a_chunks or 4)
 
 
+def moe_dropless_a2a_plan(cfg: ModelConfig, mesh, axes, E_loc: int, C: int,
+                          n_loc: int):
+    """Dropless plan chooser: ragged (dense-bucketed) vs sparse
+    (neighborhood) Alltoallv, decided by the router's expected density.
+
+    The expected nonzero fraction of the p x p count matrix follows the
+    Poisson occupancy of ``top_k * n_loc / p`` tokens per (source, dest)
+    pair: ``rho ~= 1 - exp(-top_k * n_loc / p)``.  With
+    ``cfg.a2a_backend == "autotune"`` the measured ragged-vs-sparse
+    winner recorded by :func:`core.autotune.autotune_ragged` is replayed
+    for exactly this (devices, EP axes, row, dtype, window, density
+    decade) key; on a miss — and for every analytic backend — the
+    density-aware :func:`core.tuning.choose_ragged_algorithm` prices
+    both and the sparse plan is used only when it wins.  Either way the
+    returned plan exposes the same ``forward``/``reverse`` bucketed
+    contract, so :func:`_moe_inner` is backend-agnostic.
+    """
+    comm = moe_ep_comm(cfg, mesh, axes)
+    if comm is None:
+        return None
+    window = E_loc * C
+    lam = cfg.top_k * n_loc / comm.p
+    density = min(1.0, max(1e-6, 1.0 - math.exp(-lam)))
+    backend = None
+    if cfg.a2a_backend == "autotune":
+        rec = lookup_ragged_measured(
+            comm.dev_key, comm.dims, comm.axis_names, (cfg.d_model,),
+            cfg.cdtype, window, cfg.a2a_variant, density)
+        if rec is not None:
+            backend = rec["winner"]["backend"]
+    if backend is None:
+        row_bytes = cfg.d_model * jnp.dtype(cfg.cdtype).itemsize
+        sched = choose_ragged_algorithm(
+            comm.dims, default_links(comm.axis_names), row_bytes,
+            next_pow2(window), max_chunks=cfg.a2a_chunks or 4,
+            density=density)
+        backend = sched.kind
+    if backend == "sparse":
+        avg = min(float(window), max(1.0, cfg.top_k * n_loc / comm.p))
+        return comm.sparse_all_to_all(
+            row_shape=(cfg.d_model,), dtype=cfg.cdtype, max_count=window,
+            avg_count=avg, density=density)
+    return moe_ragged_a2a_plan(cfg, mesh, axes, E_loc, C, n_loc)
+
+
 def _moe_inner(x, router_w, w1, w3, w2, *, cfg: ModelConfig, axes, G, E_loc,
                R, C, tp_axis, reduce_axes, plan=None, ragged_plan=None):
     """Per-device MoE computation (runs inside shard_map, or standalone when
     there is no mesh).  x: (B_loc, S, D); w*: (1, E_loc, ...) local slices
     of the virtual-expert arrays; ``plan`` is the resolved A2APlan (None
-    when there is no EP group); ``ragged_plan`` the RaggedA2APlan dropless
-    mode routes through instead (``capacity_factor=None``)."""
+    when there is no EP group); ``ragged_plan`` the RaggedA2APlan — or the
+    duck-typed SparseA2APlan, same bucketed forward/reverse contract —
+    dropless mode routes through instead (``capacity_factor=None``)."""
     B, S, D = x.shape
     N = B * S
     E = cfg.n_experts
@@ -314,10 +363,11 @@ def moe_block(p, x, cfg: ModelConfig, mesh=None,
     router_spec = P(None, None)
 
     # Dropless mode replaces the capacity-padded dense collective with the
-    # ragged plan; otherwise the dense A2APlan path is unchanged.
+    # ragged or sparse-neighborhood plan (density-chosen); otherwise the
+    # dense A2APlan path is unchanged.
     if cfg.dropless:
-        plan, ragged = None, moe_ragged_a2a_plan(cfg, mesh, axes, E_loc, C,
-                                                 n_loc)
+        plan, ragged = None, moe_dropless_a2a_plan(cfg, mesh, axes, E_loc, C,
+                                                   n_loc)
     else:
         plan, ragged = moe_a2a_plan(cfg, mesh, axes, E_loc, C), None
     inner = functools.partial(

@@ -15,6 +15,7 @@ from repro.core.simulator import (
     PAPER_EXAMPLES,
     check_correct,
     check_correct_alltoallv,
+    check_correct_sparse_alltoallv,
     example_index_table,
     round_datatype,
     simulate_direct_alltoallv,
@@ -22,6 +23,7 @@ from repro.core.simulator import (
     simulate_factorized_alltoall,
     simulate_factorized_alltoallv,
     simulate_factorized_reduce_scatter,
+    simulate_sparse_alltoallv,
     strides,
 )
 
@@ -158,6 +160,24 @@ class TestRaggedOracle:
         counts[0][1] = counts[1][0] = 0
         assert check_correct_alltoallv((5, 4), counts)
 
+    def test_fully_empty_matrix(self):
+        # degenerate Alltoallv: nobody sends anything — the slot movement
+        # still runs and must deliver all-empty pairs everywhere
+        p = 20
+        counts = [[0] * p for _ in range(p)]
+        assert check_correct_alltoallv((5, 4), counts)
+
+    def test_single_nonzero_row(self):
+        # one rank broadcasts, every other row is empty: the combined
+        # round messages are almost all empty but movement stays exact
+        p = 24
+        counts = [[0] * p for _ in range(p)]
+        counts[3] = [2] * p
+        assert check_correct_alltoallv((2, 3, 4), counts)
+        counts[3] = [0] * p
+        counts[3][17] = 5            # single non-zero *entry*
+        assert check_correct_alltoallv((2, 3, 4), counts)
+
     def test_uniform_counts_degenerate_to_dense(self):
         # counts == c everywhere: element ordering per pair must match the
         # dense simulator's block payloads, and slot volume must equal
@@ -189,6 +209,62 @@ class TestRaggedOracle:
             simulate_factorized_alltoallv((2, 2), [[1, 2], [3, 4]])
         with pytest.raises(ValueError, match="non-negative"):
             simulate_factorized_alltoallv((2,), [[1, -1], [0, 0]])
+
+
+class TestSparseOracle:
+    """The sparse-neighborhood oracle (core.sparse's reference): the
+    same slot movement as the factorized Alltoallv, but all-empty
+    combined round messages are skipped — payloads must still equal the
+    direct exchange, with per-message skip accounting on top."""
+
+    @staticmethod
+    def _sparse_counts(p, density, max_count=6, seed=0):
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        c = (rng.integers(1, max_count + 1, size=(p, p))
+             * (rng.random((p, p)) < density))
+        return c.astype(int).tolist()
+
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4)])
+    @pytest.mark.parametrize("density", [0.05, 0.3, 1.0])
+    def test_paper_tori_random_sparse(self, dims, density):
+        p = math.prod(dims)
+        counts = self._sparse_counts(p, density, seed=p)
+        assert check_correct_sparse_alltoallv(dims, counts)
+
+    @pytest.mark.parametrize("dims,order", [
+        ((5, 4), (1, 0)), ((2, 3, 4), (2, 0, 1)), ((2, 3, 4), (1, 2, 0)),
+    ])
+    def test_round_orders_commute_sparse(self, dims, order):
+        counts = self._sparse_counts(math.prod(dims), 0.2, seed=5)
+        assert check_correct_sparse_alltoallv(dims, counts, order)
+
+    def test_fully_empty_skips_everything(self):
+        p = 12
+        counts = [[0] * p for _ in range(p)]
+        final, vol = simulate_sparse_alltoallv((3, 4), counts)
+        assert vol.skipped_exchanges == vol.total_exchanges
+        assert vol.skip_fraction == 1.0
+        assert vol.skipped_rounds == 2          # every round all-empty
+        assert vol.total_elements_sent == 0
+        assert all(final[r][s] == [] for r in range(p) for s in range(p))
+
+    def test_dense_matrix_skips_nothing(self):
+        p = 12
+        counts = [[1] * p for _ in range(p)]
+        _, vol = simulate_sparse_alltoallv((3, 4), counts)
+        assert vol.skipped_exchanges == 0 and vol.skipped_rounds == 0
+        # per round k every rank exchanges with D[k]-1 peers
+        assert vol.total_exchanges == 12 * (3 - 1) + 12 * (4 - 1)
+        assert vol.combined_messages == vol.total_exchanges
+
+    def test_low_density_skips_majority(self):
+        # the subsystem's acceptance bound, at the oracle level: <=10%
+        # density on the 3x4 torus drops over half the per-round
+        # combined messages
+        counts = self._sparse_counts(12, 0.1, seed=0)
+        _, vol = simulate_sparse_alltoallv((3, 4), counts)
+        assert vol.skip_fraction >= 0.5
 
 
 class TestExactAlltoallv:

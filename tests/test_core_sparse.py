@@ -1,0 +1,264 @@
+"""Device-free unit tests for the sparse-neighborhood Alltoallv subsystem
+(core.sparse): the per-round message masks, the traffic-stats oracle
+surface, SparseA2APlan resolution/caching/describe/teardown, the exact
+host path against the ragged reference, and the density-aware tuning
+policy boundaries.
+
+Multi-device bit-exactness of the jitted sparse plan against the
+simulator oracle and the dense ragged path runs in
+``tests/device_scripts/check_sparse.py`` (see test_multidevice.py).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cache as core_cache
+from repro.core import plan as core_plan
+from repro.core.cache import free_all, set_cache_capacity
+from repro.core.plan import (
+    SparseA2APlan,
+    free_plans,
+    plan_ragged_all_to_all,
+    plan_sparse_all_to_all,
+    set_plan_cache_capacity,
+)
+from repro.core.ragged import exact_alltoallv
+from repro.core.sparse import (
+    round_message_masks,
+    sparse_exact_alltoallv,
+    sparse_traffic_stats,
+)
+from repro.core.tuning import (
+    ICI,
+    choose_ragged_algorithm,
+    predict_ragged,
+    predict_sparse,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registries():
+    free_plans()
+    free_all()
+    core_plan._PLANS.stats.update(hits=0, misses=0, evictions=0)
+    core_cache._REGISTRY.stats.update(hits=0, misses=0, evictions=0)
+    old_plan_cap = core_plan._PLANS.capacity
+    old_fact_cap = core_cache._REGISTRY.capacity
+    yield
+    set_plan_cache_capacity(old_plan_cap)
+    set_cache_capacity(old_fact_cap)
+    free_plans()
+    free_all()
+
+
+def _sparse_counts(p, density, max_count=6, seed=0):
+    rng = np.random.default_rng(seed)
+    c = (rng.integers(1, max_count + 1, size=(p, p))
+         * (rng.random((p, p)) < density))
+    return c.astype(np.int64)
+
+
+class TestRoundMessageMasks:
+    def test_shapes_and_alignment(self):
+        dims = (3, 4)
+        p = 12
+        masks = round_message_masks(dims)
+        assert len(masks) == 2
+        assert masks[0].shape == (3 - 1, p, p)
+        assert masks[1].shape == (4 - 1, p, p)
+        assert all(m.dtype == bool for m in masks)
+
+    def test_round_order_permutes_masks(self):
+        dims = (3, 4)
+        fwd = round_message_masks(dims, (0, 1))
+        rev = round_message_masks(dims, (1, 0))
+        # executed-order alignment: reversed order leads with the size-4
+        # round's masks
+        assert rev[0].shape[0] == 3 and rev[1].shape[0] == 2
+        assert fwd[0].shape[0] == 2 and fwd[1].shape[0] == 3
+
+    def test_every_offdiagonal_pair_is_carried(self):
+        # each (src, dst) pair with src != dst must ride at least one
+        # guarded lane, else its payload could never move
+        for dims in [(3, 4), (2, 3, 2), (12,)]:
+            p = math.prod(dims)
+            masks = round_message_masks(dims)
+            union = np.zeros((p, p), bool)
+            for m in masks:
+                union |= m.any(axis=0)
+            off = ~np.eye(p, dtype=bool)
+            assert (union | ~off).all()
+            # the self pair never needs a network lane
+            assert not (union & np.eye(p, dtype=bool)).any()
+
+    def test_single_pair_lane_count_matches_oracle(self):
+        # a count matrix with ONE non-zero pair: the number of mask
+        # lanes carrying that pair must equal the oracle's count of
+        # non-empty combined messages
+        dims = (3, 4)
+        p = 12
+        counts = np.zeros((p, p), np.int64)
+        counts[2, 7] = 3
+        stats = sparse_traffic_stats(dims, counts.tolist())
+        masks = round_message_masks(dims)
+        lanes = sum(int(m[delta][2, 7])
+                    for m in masks for delta in range(m.shape[0]))
+        assert stats["combined_messages"] == lanes > 0
+
+    def test_rejects_trivial_dims(self):
+        with pytest.raises(ValueError):
+            round_message_masks((1, 4))
+
+
+class TestTrafficStats:
+    def test_low_density_majority_skipped(self):
+        # the subsystem's acceptance bound at the stats-API level
+        counts = _sparse_counts(12, 0.1, seed=0)
+        stats = sparse_traffic_stats((3, 4), counts.tolist())
+        assert stats["skip_fraction"] >= 0.5
+        assert stats["density"] <= 0.2
+        assert stats["skipped_exchanges"] + stats["combined_messages"] \
+            == stats["total_exchanges"]
+
+    def test_dense_skips_nothing(self):
+        counts = np.ones((12, 12), np.int64)
+        stats = sparse_traffic_stats((3, 4), counts.tolist())
+        assert stats["skipped_exchanges"] == 0
+        assert stats["skipped_rounds"] == 0
+        assert stats["density"] == 1.0
+
+
+class TestSparsePlan:
+    def test_resolution_and_describe(self):
+        plan = plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=5,
+                                      density=0.1)
+        assert isinstance(plan, SparseA2APlan)
+        assert plan.bucket == 8 and plan.p == 12
+        d = plan.describe()
+        assert d["kind"] == "sparse" and d["backend"] == "sparse"
+        assert d["expected_density"] == pytest.approx(0.1)
+        # no host-side analysis yet: measured stats are None
+        assert d["density"] is None and d["skipped_rounds"] is None
+        assert d["counts_backend"] in ("direct", "factorized", "overlap")
+        assert d["predicted_seconds"] > 0
+
+    def test_registry_hit_and_density_in_key(self):
+        a = plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=5,
+                                   density=0.1)
+        b = plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=5,
+                                   density=0.1)
+        assert a is b and b.describe()["cache"] == "hit"
+        c = plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=5,
+                                   density=0.5)
+        assert c is not a
+
+    def test_analyze_populates_describe(self):
+        plan = plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=6,
+                                      density=0.1)
+        counts = _sparse_counts(12, 0.1, seed=0)
+        stats = plan.analyze(counts)
+        assert stats["skip_fraction"] >= 0.5
+        d = plan.describe()
+        assert d["density"] == stats["density"]
+        assert d["skipped_rounds"] == stats["skipped_rounds"]
+        assert d["combined_messages"] == stats["combined_messages"]
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="density"):
+            plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=5,
+                                   density=0.0)
+        with pytest.raises(ValueError, match="density"):
+            plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=5,
+                                   density=1.5)
+        with pytest.raises(ValueError):
+            plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=0)
+
+    def test_teardown_releases_counts_plan(self):
+        plan_sparse_all_to_all((3, 4), ("i", "j"), max_count=5,
+                               density=0.1)
+        free_plans()
+        assert len(core_plan.plan_cache_entries()) == 0
+
+
+class TestSparseExact:
+    @pytest.mark.parametrize("dims", [(3, 4), (2, 3, 2), (5, 4)])
+    def test_matches_ragged_exact(self, dims):
+        p = math.prod(dims)
+        counts = _sparse_counts(p, 0.3, seed=p)
+        rows = [[np.arange(counts[s][t], dtype=np.int64) * p * p + s * p + t
+                 for t in range(p)] for s in range(p)]
+        recv_s, cm_s, vol = sparse_exact_alltoallv(rows, dims)
+        recv_r, cm_r = exact_alltoallv(rows, dims)
+        assert cm_s == cm_r
+        for r in range(p):
+            for s in range(p):
+                np.testing.assert_array_equal(recv_s[r][s], recv_r[r][s])
+        assert vol.skipped_exchanges > 0
+        assert vol.skipped_exchanges + vol.combined_messages \
+            == vol.total_exchanges
+
+    def test_plan_exact_caches_stats(self):
+        dims = (3, 4)
+        p = 12
+        plan = plan_sparse_all_to_all(dims, ("i", "j"), max_count=6,
+                                      density=0.1)
+        counts = _sparse_counts(p, 0.1, seed=0)
+        rows = [[np.arange(counts[s][t], dtype=np.int64)
+                 for t in range(p)] for s in range(p)]
+        recv, cm, vol = plan.exact(rows)
+        assert cm == counts.tolist()
+        assert vol.skip_fraction >= 0.5
+        assert plan.last_stats is not None
+        assert plan.last_stats["skip_fraction"] >= 0.5
+
+
+class TestTuningBoundaries:
+    """Satellite: domain boundaries of the ragged/sparse predictors and
+    the density-aware policy."""
+
+    DIMS = (4, 4)
+    LINKS = (ICI, ICI)
+
+    def test_predict_ragged_occupancy_domain(self):
+        kw = dict(row_bytes=4.0, bucket=64, p=16)
+        full = predict_ragged(self.DIMS, self.LINKS, occupancy=1.0, **kw)
+        tiny = predict_ragged(self.DIMS, self.LINKS, occupancy=1e-9, **kw)
+        assert full > 0 and tiny > 0
+        for bad in (0.0, -0.25, 1.0001):
+            with pytest.raises(ValueError, match="occupancy"):
+                predict_ragged(self.DIMS, self.LINKS, occupancy=bad, **kw)
+
+    def test_predict_sparse_density_domain(self):
+        kw = dict(row_bytes=4.0, bucket=64, p=16)
+        full = predict_sparse(self.DIMS, self.LINKS, density=1.0, **kw)
+        tiny = predict_sparse(self.DIMS, self.LINKS, density=1e-9, **kw)
+        assert 0 < tiny < full
+        for bad in (0.0, -0.25, 1.0001):
+            with pytest.raises(ValueError, match="density"):
+                predict_sparse(self.DIMS, self.LINKS, density=bad, **kw)
+
+    def test_density_monotone(self):
+        kw = dict(row_bytes=1024.0, bucket=256, p=16)
+        ts = [predict_sparse(self.DIMS, self.LINKS, density=r, **kw)
+              for r in (0.01, 0.1, 0.5, 1.0)]
+        assert ts == sorted(ts)
+
+    def test_choose_flips_dense_to_sparse(self):
+        # big payload + near-empty matrix: sparse wins; fully dense:
+        # lane overhead keeps the dense bucketed schedule
+        kw = dict(row_bytes=1 << 16, bucket=1024)
+        lo = choose_ragged_algorithm(self.DIMS, self.LINKS, density=0.02,
+                                     **kw)
+        hi = choose_ragged_algorithm(self.DIMS, self.LINKS, density=1.0,
+                                     **kw)
+        assert lo.kind == "sparse" and lo.n_chunks == 1
+        assert hi.kind != "sparse"
+        none = choose_ragged_algorithm(self.DIMS, self.LINKS, **kw)
+        assert none.kind != "sparse"
+
+    def test_choose_invalid_density_raises(self):
+        with pytest.raises(ValueError, match="density"):
+            choose_ragged_algorithm(self.DIMS, self.LINKS, row_bytes=4.0,
+                                    bucket=64, density=-0.5)

@@ -60,6 +60,22 @@ def test_ragged_alltoallv_12dev():
 
 
 @pytest.mark.slow
+def test_sparse_alltoallv_12dev():
+    # Sparse-neighborhood subsystem acceptance: the bucketed sparse plan
+    # matches the simulator sparse oracle bit-exactly, degenerates to the
+    # dense ragged path under uniform counts, skips >= 50% of per-round
+    # peer exchanges at <= 10% density (the ISSUE bound, via plan stats),
+    # and dropless MoE routes through the sparse plan when the tuning DB
+    # names it the measured winner.
+    out = run_device_script("check_sparse.py", devices=12)
+    assert "OK bucketed sparse == simulator oracle" in out
+    assert "OK uniform sparse == dense ragged bit-exact" in out
+    assert out.count(">= 0.5") == 3
+    assert "OK exact sparse == exact ragged == simulator oracle" in out
+    assert "OK dropless MoE routes through sparse plan" in out
+
+
+@pytest.mark.slow
 def test_torus_comm_12dev():
     # TorusComm acceptance: sub-comm plans are the shared cached objects
     # and execute bit-exactly; the new all-gather / reduce-scatter family
