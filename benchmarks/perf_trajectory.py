@@ -21,6 +21,12 @@ Columns per density:
   only the non-empty combined messages), ``core.sparse`` — plus its
   oracle-derived ``skip_fraction`` on the measured count matrix.
 
+One extra ``kv_migration`` row times the serving spine's KV-cache
+handoff: the ``KVMigrationPlan`` collective with one migrating sequence
+per prefill rank (the count matrix non-zero only in the
+prefill->decode block) against the dense exchange moving the same
+padded buffer.
+
 Run via:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -44,7 +50,7 @@ from repro.core import dims_create
 from repro.core.cache import cart_create
 from repro.core.comm import torus_comm
 
-PR = 7
+PR = 8
 DENSITIES = (0.05, 0.5, 1.0)
 MAX_COUNT = 256
 WARMUP, REPS = 4, 20
@@ -113,9 +119,33 @@ def run(p_procs: int) -> dict:
               f"ragged={row['ragged_us']:.1f}us,"
               f"sparse={row['sparse_us']:.1f}us,"
               f"skip={row['skip_fraction']:.3f}")
+
+    # the serving spine's KV handoff: one migrating sequence per prefill
+    # rank, counts non-zero only in the prefill->decode block
+    n_prefill = p_procs // 2
+    n_decode = p_procs - n_prefill
+    kv = comm.kv_migration((), jnp.int32, max_count=MAX_COUNT,
+                           n_prefill=n_prefill,
+                           migrations_per_tick=float(n_prefill))
+    kv_counts = np.zeros((p_procs, p_procs), np.int32)
+    for s in range(n_prefill):
+        kv_counts[s, n_prefill + s % n_decode] = MAX_COUNT
+    kv_us = _best(kv.host_fn(), x, jnp.asarray(kv_counts)) * 1e6
+    kv_row = {
+        "n_prefill": n_prefill,
+        "n_decode": n_decode,
+        "migrating_pairs": n_prefill,
+        "inner_kind": kv.inner_kind,
+        "dense_us": dense_us,
+        "kv_migrate_us": kv_us,
+    }
+    print(f"perf_trajectory,kv_migration,n_prefill={n_prefill},"
+          f"inner={kv.inner_kind},dense={dense_us:.1f}us,"
+          f"kv_migrate={kv_us:.1f}us")
     return {"pr": PR, "p": p_procs, "dims": list(dims),
             "max_count": MAX_COUNT, "bucket": bucket, "dtype": "int32",
-            "warmup": WARMUP, "repeats": REPS, "densities": rows}
+            "warmup": WARMUP, "repeats": REPS, "densities": rows,
+            "kv_migration": kv_row}
 
 
 def main(argv=None):

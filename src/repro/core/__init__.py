@@ -24,12 +24,14 @@ from .cache import (
 )
 from .plan import (
     A2APlan,
+    KVMigrationPlan,
     RaggedA2APlan,
     SparseA2APlan,
     free_plans,
     plan_all_to_all,
     plan_cache_entries,
     plan_cache_stats,
+    plan_kv_migration,
     plan_ragged_all_to_all,
     plan_sparse_all_to_all,
     set_plan_cache_capacity,
@@ -87,6 +89,7 @@ from .simulator import (
     simulate_factorized_alltoall,
     simulate_factorized_alltoallv,
     simulate_factorized_reduce_scatter,
+    simulate_kv_migration,
     simulate_sparse_alltoallv,
 )
 from .tuning import (
@@ -94,12 +97,15 @@ from .tuning import (
     ICI,
     LinkModel,
     Schedule,
+    ServingSplit,
     choose_algorithm,
     choose_chunks,
     choose_dimwise_algorithm,
     choose_ragged_algorithm,
+    choose_serving_split,
     crossover_block_bytes,
     predict_allgather,
+    predict_kv_migration,
     predict_overlapped,
     predict_ragged,
     predict_reduce_scatter,
@@ -116,9 +122,10 @@ from .overlap import (
 )
 
 __all__ = [
-    "A2APlan", "AllGatherPlan", "DCN", "ICI", "LinkModel", "Measurement",
+    "A2APlan", "AllGatherPlan", "DCN", "ICI", "KVMigrationPlan",
+    "LinkModel", "Measurement",
     "PAPER_EXAMPLES", "RaggedA2APlan", "ReduceScatterPlan", "Schedule",
-    "SparseA2APlan", "SparseVolumeCount", "TorusComm",
+    "ServingSplit", "SparseA2APlan", "SparseVolumeCount", "TorusComm",
     "TorusFactorization", "TuningDB", "check_correct_sparse_alltoallv",
     "DeviceLossError", "FaultError", "FaultInjector", "FaultSpec",
     "Violation", "autotune", "autotune_ragged", "autotune_stats",
@@ -126,6 +133,7 @@ __all__ = [
     "cache_stats", "cart_create", "check_guidelines", "choose_algorithm",
     "choose_chunks", "choose_dimwise_algorithm", "choose_ragged_algorithm",
     "collective_bytes_of", "corrupt_checkpoint_leaf", "corrupt_tuning_db",
+    "choose_serving_split",
     "crossover_block_bytes", "default_db_path", "dims_create",
     "direct_all_to_all", "direct_all_to_all_tiled", "exact_alltoallv",
     "example_index_table", "factorized_all_to_all",
@@ -136,9 +144,11 @@ __all__ = [
     "interleave_report", "max_dims", "next_pow2", "overlapped_all_to_all",
     "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
     "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",
-    "plan_cache_stats", "plan_db_key", "plan_ragged_all_to_all",
+    "plan_cache_stats", "plan_db_key", "plan_kv_migration",
+    "plan_ragged_all_to_all",
     "plan_sparse_all_to_all",
-    "predict_allgather", "predict_overlapped", "predict_ragged",
+    "predict_allgather", "predict_kv_migration", "predict_overlapped",
+    "predict_ragged",
     "predict_reduce_scatter", "predict_sparse", "prime_factorization",
     "ragged_db_key",
     "reset_autotune_stats", "round_datatype", "round_message_masks",
@@ -147,6 +157,7 @@ __all__ = [
     "simulate_direct_alltoall", "simulate_direct_alltoallv",
     "simulate_factorized_allgather", "simulate_factorized_alltoall",
     "simulate_factorized_alltoallv", "simulate_factorized_reduce_scatter",
+    "simulate_kv_migration",
     "simulate_sparse_alltoallv", "sparse_exact_alltoallv",
     "sparse_traffic_stats",
     "torus_comm", "torus_rank", "unified_stats",

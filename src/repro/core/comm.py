@@ -450,6 +450,7 @@ class TorusComm:
         self._source = mesh if mesh is not None else fact.dims
         self._plan_keys: set = set()
         self._subs: dict[tuple, TorusComm] = {}
+        self._parts: dict[tuple, tuple] = {}
         # registry slot (cleared on free) and immutable identity (never
         # cleared — children key their lineage on it)
         self._comm_key = None
@@ -521,6 +522,61 @@ class TorusComm:
         self._subs[axes] = child
         return child
 
+    def partition(self, n_first: int, *, d: int | None = None,
+                  prefixes: tuple[str, str] = ("pre", "dec")
+                  ) -> "tuple[TorusComm, TorusComm]":
+        """The ``MPI_Comm_split`` analogue by device range: split this
+        comm's ``p`` ranks into a leading group of ``n_first`` and the
+        remaining ``p - n_first``, each re-factorized into its own
+        balanced torus (``dims_create``) — the serving spine's
+        prefill/decode domain split.
+
+        Unlike :meth:`sub` (an *axis*-subset split, every rank a member
+        of some child), partition divides the *device* range: rank ``r``
+        belongs to the first child iff ``r < n_first``.  Children are
+        full comms in the registry, cached on this comm and freed with
+        it; their axes are named ``{prefix}0..`` from ``prefixes`` so two
+        equal halves stay distinct registry entries.  Device-agnostic
+        comms (dims tuples) yield device-agnostic children.
+
+        Args:
+          n_first: rank count of the first child, ``0 < n_first < p``.
+          d: factorization degree of each child torus (default: this
+            comm's own ``d``, capped by each child's size).
+          prefixes: axis-name prefixes for the two children.
+
+        Returns ``(first, rest)``.
+        """
+        from .dims import dims_create
+        n_first = int(n_first)
+        if not 0 < n_first < self.p:
+            raise ValueError(f"n_first {n_first} outside (0, p={self.p}); "
+                             "both partitions need at least one rank")
+        if len(prefixes) != 2 or prefixes[0] == prefixes[1]:
+            raise ValueError(f"need two distinct prefixes, got {prefixes}")
+        key = (n_first, d, tuple(prefixes))
+        if key in self._parts and not any(c._freed
+                                          for c in self._parts[key]):
+            return self._parts[key]
+        devices = None if self.mesh is None \
+            else list(self.mesh.devices.flat)
+        children = []
+        for prefix, count, devs in (
+                (prefixes[0], n_first,
+                 None if devices is None else devices[:n_first]),
+                (prefixes[1], self.p - n_first,
+                 None if devices is None else devices[n_first:])):
+            dk = min(self.d if d is None else int(d), count)
+            dims = tuple(reversed(dims_create(count, dk)))
+            names = tuple(f"{prefix}{i}" for i in range(len(dims)))
+            source = dims if devs is None \
+                else cart_create(devs, dims, names)
+            children.append(torus_comm(source, names, variant=self.variant,
+                                       db=self._db, _parent=self))
+        pair = (children[0], children[1])
+        self._parts[key] = pair
+        return pair
+
     # -- collective factories ----------------------------------------------
 
     def _note(self, plan):
@@ -585,6 +641,25 @@ class TorusComm:
             variant=self.variant, round_order=round_order,
             reverse_round_order=reverse_round_order, links=links))
 
+    def kv_migration(self, row_shape=(), dtype="float32", *,
+                     max_count: int, n_prefill: int,
+                     avg_count: float | None = None,
+                     migrations_per_tick: float = 1.0,
+                     backend: str = "tuned", round_order=None,
+                     reverse_round_order=None, links=None, db=None):
+        """Build (or fetch) the :class:`~repro.core.plan.KVMigrationPlan`
+        for the prefill->decode KV-cache handoff over this comm: an
+        Alltoallv whose count matrix is non-zero only in the
+        prefill->decode block — see
+        :func:`~repro.core.plan.plan_kv_migration` for the knobs."""
+        return self._note(_planmod._build_kv_plan(
+            self._source, self.axis_names, row_shape, dtype,
+            max_count=max_count, n_prefill=n_prefill, avg_count=avg_count,
+            migrations_per_tick=migrations_per_tick, backend=backend,
+            variant=self.variant, round_order=round_order,
+            reverse_round_order=reverse_round_order, links=links,
+            db=self._db if db is None else db))
+
     def all_gather(self, block_shape=None, dtype=None, *,
                    backend: str = "tuned", round_order=None,
                    n_chunks: int = 1, links=None) -> AllGatherPlan:
@@ -626,6 +701,10 @@ class TorusComm:
         for child in list(self._subs.values()):
             child.free()
         self._subs.clear()
+        for pair in list(self._parts.values()):
+            for child in pair:
+                child.free()
+        self._parts.clear()
         for key in self._plan_keys:
             _planmod._drop_plan(key)
         self._plan_keys.clear()

@@ -281,6 +281,90 @@ def choose_ragged_algorithm(axis_dims, axis_links, row_bytes: float,
     return best
 
 
+def predict_kv_migration(dims, links, row_bytes: float, bucket: int, *,
+                         n_prefill: int,
+                         migrations_per_tick: float = 1.0) -> Schedule:
+    """Alpha-beta prediction for the prefill->decode KV-cache handoff.
+
+    The handoff is an Alltoallv over the *full* serving comm whose count
+    matrix is non-zero only in the prefill->decode block: at most
+    ``n_prefill * (p - n_prefill)`` of the ``p^2`` pairs can carry a
+    sequence, and a scheduler that migrates ``migrations_per_tick``
+    sequences per tick fills that many pairs.  That block density is
+    exactly the sparse-neighborhood regime knob, so the prediction is
+    :func:`choose_ragged_algorithm` at the expected density — the
+    returned schedule's ``kind`` may be ``"sparse"`` (few migrations per
+    tick: message combining leaves most lanes empty) or a dense data
+    backend (many concurrent migrations), the same dense<->sparse
+    crossover the MoE router sees.
+    """
+    p = math.prod(dims)
+    links = per_axis_links(links, len(dims))
+    n_prefill = int(n_prefill)
+    if not 0 < n_prefill < p:
+        raise ValueError(f"n_prefill {n_prefill} outside (0, p={p})")
+    if migrations_per_tick <= 0:
+        raise ValueError(f"migrations_per_tick must be > 0, got "
+                         f"{migrations_per_tick}")
+    pairs = min(float(migrations_per_tick),
+                float(n_prefill * (p - n_prefill)))
+    density = max(pairs, 1.0) / float(p * p)
+    return choose_ragged_algorithm(dims, links, float(row_bytes),
+                                   int(bucket), density=density)
+
+
+@dataclass(frozen=True)
+class ServingSplit:
+    """A sized prefill:decode partition of one serving comm."""
+    n_prefill: int
+    n_decode: int
+    predicted_seconds: float       # per-tick bottleneck incl. migration
+    prefill_seconds: float
+    decode_seconds: float
+    migration_seconds: float
+    migration_kind: str            # winning KV-migration schedule kind
+
+
+def choose_serving_split(dims, links, *, row_bytes: float, max_count: int,
+                         prefill_tokens: float = 4.0,
+                         decode_tokens: float = 1.0,
+                         token_seconds: float = 1e-4,
+                         migrations_per_tick: float = 1.0) -> ServingSplit:
+    """Size the prefill:decode split from the predicted migration cost.
+
+    Per serving tick the prefill domain must ingest ``prefill_tokens``
+    prompt tokens and the decode domain must emit ``decode_tokens``
+    generated tokens; a domain of ``n`` ranks processes tokens at rate
+    ``n / token_seconds`` (each rank one token per step), so the two
+    domains cost ``token_seconds * tokens / n`` and the tick is their
+    max — plus the KV handoff, priced end to end by
+    :func:`predict_kv_migration` over the *full* comm (``row_bytes`` is
+    one flattened per-position KV row, ``max_count`` the per-sequence
+    row bound — the cache's sequence extent).  Enumerates every
+    ``n_prefill in 1..p-1`` and returns the argmin; ties go to the
+    smaller prefill pool (decode capacity is the scarce resource once
+    the tick time is equal).
+    """
+    from .ragged import next_pow2
+    p = math.prod(dims)
+    if p < 2:
+        raise ValueError(f"need p >= 2 ranks to split, got {p}")
+    links = resolve_links(links, dims)
+    bucket = next_pow2(max_count)
+    best = None
+    for n in range(1, p):
+        t_pre = token_seconds * float(prefill_tokens) / n
+        t_dec = token_seconds * float(decode_tokens) / (p - n)
+        sched = predict_kv_migration(
+            dims, links, float(row_bytes), bucket, n_prefill=n,
+            migrations_per_tick=migrations_per_tick)
+        t = max(t_pre, t_dec) + sched.predicted_seconds
+        if best is None or t < best.predicted_seconds:
+            best = ServingSplit(n, p - n, t, t_pre, t_dec,
+                                sched.predicted_seconds, sched.kind)
+    return best
+
+
 def slowest_active_link(dims, links) -> LinkModel:
     """The bandwidth bottleneck among links that carry traffic: a size-1
     axis (a trivial "pod" dim, or an unfitted placeholder link from a

@@ -288,6 +288,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
              "skipped_rounds": d["skipped_rounds"],
              "combined_messages": d["combined_messages"]}
             for d in new_plans if d.get("kind") == "sparse"],
+        # KV-migration plans (prefill/decode disaggregated serving): the
+        # serving-topology split each plan binds plus the inner exchange
+        # the cost model resolved it to — what batcher.stats() reports
+        # per serving comm at run time.
+        "a2a_kv_migration": [
+            {"axis_names": d["axis_names"], "bucket": d["bucket"],
+             "max_count": d["max_count"],
+             "n_prefill": d["n_prefill"], "n_decode": d["n_decode"],
+             "expected_density": d["expected_density"],
+             "inner_kind": d["inner_kind"], "backend": d["backend"],
+             "tuned_from": d["tuned_from"]}
+            for d in new_plans if d.get("kind") == "kv_migrate"],
         "a2a_plan_cache": plan_cache_stats(),
         # Tuning-DB traffic for the cell (delta over the cell, like the
         # a2a_plans snapshot above): under a2a_backend="autotune"

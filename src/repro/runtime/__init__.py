@@ -1,7 +1,18 @@
-"""Fault-tolerant training runtime."""
+"""Fault-tolerant training and serving runtime."""
 
+from .serving import (
+    AdmissionController,
+    ContinuousBatcher,
+    DisaggregatedServer,
+    KVRowCodec,
+    PrefillWorker,
+    Request,
+    ServingTopology,
+)
 from .trainer import Trainer, TrainerConfig
 from .watchdog import Action, EscalationPolicy, StragglerWatchdog
 
-__all__ = ["Action", "EscalationPolicy", "Trainer", "TrainerConfig",
-           "StragglerWatchdog"]
+__all__ = ["Action", "AdmissionController", "ContinuousBatcher",
+           "DisaggregatedServer", "EscalationPolicy", "KVRowCodec",
+           "PrefillWorker", "Request", "ServingTopology",
+           "StragglerWatchdog", "Trainer", "TrainerConfig"]

@@ -330,3 +330,66 @@ class TestDelegatorsUseImplicitComm:
         comm = torus_comm((2, 3), ("i", "j"))
         p = comm.all_to_all((8,), "float32", backend="direct")
         assert p.describe()["cache"] == "hit"
+
+
+class TestPartition:
+    """The MPI_Comm_split analogue by device range — the serving spine's
+    prefill/decode domain split."""
+
+    def test_device_range_split(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        pre, dec = comm.partition(4)
+        assert pre.p == 4 and dec.p == 2
+        assert pre.parent is comm and dec.parent is comm
+        assert pre.dims == (2, 2) and dec.dims == (1, 2)
+        assert pre.axis_names == ("pre0", "pre1")
+        assert dec.axis_names == ("dec0", "dec1")
+        # device-agnostic parent -> device-agnostic children
+        assert pre.mesh is None and dec.mesh is None
+
+    def test_cached_and_freed_with_parent(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        pre, dec = comm.partition(4)
+        again = comm.partition(4)
+        assert again[0] is pre and again[1] is dec
+        # distinct split point -> distinct pair
+        other = comm.partition(2)
+        assert other[0] is not pre
+        # freeing a child invalidates the cached pair; re-partition rebuilds
+        pre.free()
+        pre2, dec2 = comm.partition(4)
+        assert pre2 is not pre
+        # children die with the parent
+        comm.free()
+        assert pre2._freed and dec2._freed and other[0]._freed
+
+    def test_validation(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        with pytest.raises(ValueError, match="n_first"):
+            comm.partition(0)
+        with pytest.raises(ValueError, match="n_first"):
+            comm.partition(6)
+        with pytest.raises(ValueError, match="prefixes"):
+            comm.partition(3, prefixes=("a", "a"))
+
+    def test_partition_degree_override(self):
+        comm = torus_comm((2, 3), ("i", "j"))
+        pre, dec = comm.partition(4, d=1)
+        assert pre.dims == (4,) and dec.dims == (2,)
+
+    def test_kv_migration_factory_notes_plan(self):
+        from repro.core.plan import plan_kv_migration
+
+        comm = torus_comm((2, 3), ("i", "j"))
+        plan = comm.kv_migration((4,), max_count=5, n_prefill=2)
+        assert plan.kind == "kv_migrate" and plan.n_prefill == 2
+        assert plan._registry_key in comm._plan_keys
+        # the module-level delegator resolves to the same registry entry
+        again = plan_kv_migration((2, 3), ("i", "j"), (4,),
+                                  max_count=5, n_prefill=2)
+        assert again is plan
+        # comm teardown drops the plan slice
+        comm.free()
+        fresh = plan_kv_migration((2, 3), ("i", "j"), (4,),
+                                  max_count=5, n_prefill=2)
+        assert fresh is not plan

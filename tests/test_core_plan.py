@@ -516,3 +516,151 @@ class TestMoEPlanConstruction:
         # same geometry again: fetched from the registry, not rebuilt
         again = moe_a2a_plan(cfg, mesh, ("data", "pod"), E_loc=2, C=8)
         assert again is plan
+
+
+class TestKVMigrationPlan:
+    """Device-free resolution/registry/datatype tests for
+    KVMigrationPlan; bit-exact disaggregated serving over the plan runs
+    in check_serving.py (12 devices)."""
+
+    def test_describe_golden(self):
+        from repro.core.plan import plan_kv_migration
+
+        p = plan_kv_migration((4, 2), ("i", "j"), (16,), "float32",
+                              max_count=12, avg_count=6.0, n_prefill=3,
+                              migrations_per_tick=2.0, backend="ragged",
+                              variant="paper", round_order=(1, 0),
+                              links=(ICI, DCN))
+        d = p.describe()
+        pred = d.pop("predicted_seconds")
+        assert pred > 0
+        assert d == {
+            "kind": "kv_migrate",
+            "inner_kind": "ragged",
+            "axis_names": ["i", "j"],
+            "dims": [4, 2],
+            "p": 8,
+            "d": 2,
+            "backend": "factorized",    # inner data phase: cost model
+            "requested_backend": "ragged",
+            "variant": "paper",
+            "row_shape": [16],
+            "dtype": "float32",
+            "row_bytes": 64,
+            "max_count": 12,
+            "avg_count": 6.0,
+            "bucket": 16,               # next pow2 of 12
+            "expected_occupancy": 6.0 / 16,
+            "n_prefill": 3,
+            "n_decode": 5,
+            "migrations_per_tick": 2.0,
+            # 2 migrating pairs in an 8x8 count matrix
+            "expected_density": 2.0 / 64,
+            "tuned_from": "model",
+            "cache": "miss",
+        }
+        import json
+        json.dumps(p.describe())
+
+    def test_registry_identity_and_inner_sharing(self):
+        from repro.core.plan import (RaggedA2APlan, SparseA2APlan,
+                                     plan_kv_migration,
+                                     plan_ragged_all_to_all)
+
+        a = plan_kv_migration((2, 3), ("i", "j"), (4,), "float32",
+                              max_count=5, n_prefill=2, backend="ragged")
+        b = plan_kv_migration((2, 3), ("i", "j"), (4,), "float32",
+                              max_count=5, n_prefill=2, backend="ragged")
+        assert a is b and b.describe()["cache"] == "hit"
+        assert isinstance(a.inner, RaggedA2APlan)
+        # distinct n_prefill -> distinct plan, shared inner exchange
+        c = plan_kv_migration((2, 3), ("i", "j"), (4,), "float32",
+                              max_count=5, n_prefill=4, backend="ragged")
+        assert c is not a and c.inner is a.inner
+        # the inner ragged plan lives in the same registry
+        r = plan_ragged_all_to_all((2, 3), ("i", "j"), (4,), "float32",
+                                   max_count=5, backend="tuned")
+        assert r is a.inner
+        # an explicit sparse inner
+        s = plan_kv_migration((2, 3), ("i", "j"), (4,), "float32",
+                              max_count=5, n_prefill=2, backend="sparse")
+        assert s.inner_kind == "sparse"
+        assert isinstance(s.inner, SparseA2APlan)
+
+    def test_tuned_matches_predict_kv_migration(self):
+        from repro.core.plan import plan_kv_migration
+        from repro.core.tuning import predict_kv_migration
+
+        dims, links = (4, 2), (ICI, DCN)
+        p = plan_kv_migration(dims, ("i", "j"), (16,), "float32",
+                              max_count=8, n_prefill=3,
+                              migrations_per_tick=2.0, links=links)
+        sched = predict_kv_migration(dims, links, 16 * 4, p.bucket,
+                                     n_prefill=3, migrations_per_tick=2.0)
+        assert p.tuned_from == "model"
+        assert p.inner_kind == \
+            ("sparse" if sched.kind == "sparse" else "ragged")
+        assert p.predicted_seconds == pytest.approx(sched.predicted_seconds)
+
+    def test_validation(self):
+        from repro.core.plan import plan_kv_migration
+
+        with pytest.raises(ValueError, match="n_prefill"):
+            plan_kv_migration((2, 2), ("i", "j"), (4,), "float32",
+                              max_count=4, n_prefill=0)
+        with pytest.raises(ValueError, match="n_prefill"):
+            plan_kv_migration((2, 2), ("i", "j"), (4,), "float32",
+                              max_count=4, n_prefill=4)
+        with pytest.raises(ValueError, match="migrations_per_tick"):
+            plan_kv_migration((2, 2), ("i", "j"), (4,), "float32",
+                              max_count=4, n_prefill=2,
+                              migrations_per_tick=0.0)
+
+    def test_pair_counts_enforces_block_structure(self):
+        from repro.core.plan import plan_kv_migration
+
+        p = plan_kv_migration((2, 3), ("i", "j"), (4,), "float32",
+                              max_count=5, n_prefill=2)
+        counts = p.pair_counts({(0, 3): 2, (1, 5): 5})
+        assert counts.shape == (6, 6)
+        assert counts[0, 3] == 2 and counts[1, 5] == 5
+        assert counts.sum() == 7
+        with pytest.raises(ValueError, match="not a prefill"):
+            p.pair_counts({(3, 4): 1})      # decode rank as source
+        with pytest.raises(ValueError, match="not a decode"):
+            p.pair_counts({(0, 1): 1})      # prefill rank as destination
+        with pytest.raises(ValueError, match="max_count"):
+            p.pair_counts({(0, 3): 6})      # over the bucket bound
+
+    def test_exact_matches_oracle(self):
+        import numpy as np
+
+        from repro.core.plan import plan_kv_migration
+        from repro.core.simulator import simulate_kv_migration
+
+        dims, n_prefill = (2, 3), 2
+        lengths = {(0, 2): 3, (0, 5): 1, (1, 4): 4}
+        plan = plan_kv_migration(dims, ("i", "j"), (3,), "float32",
+                                 max_count=4, n_prefill=n_prefill,
+                                 backend="ragged")
+        p = plan.p
+        rows = [[np.arange(lengths.get((s, d), 0) * 3, dtype=np.float32)
+                 .reshape(-1, 3) + 100 * s + 10 * d
+                 for d in range(p)] for s in range(p)]
+        recv, counts = plan.exact(rows)
+        oracle, _ = simulate_kv_migration(dims, n_prefill, lengths)
+        assert counts == [[len(rows[s][d]) for d in range(p)]
+                          for s in range(p)]
+        for r in range(p):
+            for s in range(p):
+                np.testing.assert_array_equal(recv[r][s], rows[s][r])
+                assert len(oracle[r][s]) == len(recv[r][s])
+        # sparse inner normalizes to the same (recv, counts) surface
+        sp = plan_kv_migration(dims, ("i", "j"), (3,), "float32",
+                               max_count=4, n_prefill=n_prefill,
+                               backend="sparse")
+        recv_s, counts_s = sp.exact(rows)
+        assert counts_s == counts
+        for r in range(p):
+            for s in range(p):
+                np.testing.assert_array_equal(recv_s[r][s], recv[r][s])

@@ -152,3 +152,18 @@ def test_pipeline_parallel():
 def test_ring_attention():
     out = run_device_script("check_ring_attention.py", devices=8)
     assert out.count("OK ring attention") == 4
+
+
+@pytest.mark.slow
+def test_serving_disaggregated_12dev():
+    # Serving spine acceptance: a (3,4) device-backed torus partitioned
+    # into prefill/decode domains serves bit-exact with the colocated
+    # ContinuousBatcher reference — KV handoff through the jitted
+    # KVMigrationPlan collective — including an injected 4-rank loss
+    # mid-stream (rebuild onto the (2,4) survivor torus, every in-flight
+    # request replayed, zero dropped).
+    out = run_device_script("check_serving.py", devices=12)
+    assert "OK serving disaggregated:" in out
+    assert "bit-exact vs colocated" in out
+    assert "OK serving rebuild: lost 4 ranks mid-stream" in out
+    assert "OK serving: disaggregated prefill/decode bit-exact" in out
