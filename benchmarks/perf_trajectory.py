@@ -1,15 +1,16 @@
 """Per-PR perf-trajectory baseline: dense vs ragged vs sparse Alltoallv.
 
-Writes ``benchmarks/artifacts/BENCH_<n>.json`` — a small, committed
+Writes ``BENCH_<n>.json`` **at the repo root** — a small, committed
 regression baseline recording the measured microseconds of the three
 bucketed exchange backends at three router densities (sparse regime,
-mid, fully dense) on the d=2 factorization.  The *committed* file is the
-baseline from the PR that introduced the sparse subsystem; the CI
-bench-smoke job regenerates a fresh copy per run and uploads it as a
-workflow artifact so the dense<->sparse crossover can be tracked across
-PRs without gating on absolute timings (CI runners are too noisy for
-thresholds — the artifact is the trajectory, the schema check is the
-gate).
+mid, fully dense) on the d=2 factorization.  Each PR commits its own
+``BENCH_<n>.json``; the regression gate (``--gate``, default on when a
+baseline exists) compares the fresh record against the newest earlier
+``BENCH_*.json`` (repo root first, then the legacy
+``benchmarks/artifacts/`` location) and fails on a >25% latency
+regression in any ``dense_us`` column — the dense factorized exchange
+is the stable reference; the ragged/sparse columns remain trajectory
+data only (their crossover moves by design as tuning evolves).
 
 Columns per density:
 
@@ -37,6 +38,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 import time
 from pathlib import Path
@@ -50,11 +52,13 @@ from repro.core import dims_create
 from repro.core.cache import cart_create
 from repro.core.comm import torus_comm
 
-PR = 8
+PR = 9
 DENSITIES = (0.05, 0.5, 1.0)
 MAX_COUNT = 256
 WARMUP, REPS = 4, 20
+REGRESSION_THRESHOLD = 0.25     # >25% slower in any dense column fails
 
+ROOT = Path(__file__).resolve().parents[1]
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
 
@@ -148,14 +152,70 @@ def run(p_procs: int) -> dict:
             "kv_migration": kv_row}
 
 
+def find_baseline(exclude: Path | None = None) -> Path | None:
+    """Newest committed baseline: the highest-numbered ``BENCH_<n>.json``
+    at the repo root (current convention), falling back to the legacy
+    ``benchmarks/artifacts/`` location; ``exclude`` keeps a run's own
+    output file from being its baseline."""
+    cands = []
+    for rank, d in enumerate((ROOT, ARTIFACTS)):
+        if not d.exists():
+            continue
+        for f in d.glob("BENCH_*.json"):
+            m = re.fullmatch(r"BENCH_(\d+)\.json", f.name)
+            if m is None:
+                continue
+            if exclude is not None and f.resolve() == exclude.resolve():
+                continue
+            cands.append((int(m.group(1)), -rank, f))
+    if not cands:
+        return None
+    return max(cands)[2]
+
+
+def check_regression(record: dict, baseline: dict,
+                     threshold: float = REGRESSION_THRESHOLD) -> list[str]:
+    """The per-PR gate: every ``dense_us`` column (one per density row,
+    plus the kv_migration row's dense reference) must be within
+    ``threshold`` of the baseline.  Returns failure messages (empty =
+    pass); rows/columns absent from the baseline are skipped — an old
+    baseline must not fail a schema-extending PR."""
+    failures = []
+
+    def gate(label, new_us, base_us):
+        if base_us is None or not base_us > 0 or new_us is None:
+            return
+        if new_us > base_us * (1.0 + threshold):
+            failures.append(
+                f"{label}: dense_us {new_us:.1f} > baseline "
+                f"{base_us:.1f} by more than {threshold:.0%}")
+
+    base_rows = {r.get("density_requested"): r
+                 for r in baseline.get("densities", ())}
+    for row in record.get("densities", ()):
+        base = base_rows.get(row.get("density_requested"))
+        if base is not None:
+            gate(f"rho={row.get('density_requested')}",
+                 row.get("dense_us"), base.get("dense_us"))
+    gate("kv_migration", record.get("kv_migration", {}).get("dense_us"),
+         baseline.get("kv_migration", {}).get("dense_us"))
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--p", type=int, default=8,
                     help="process (device) count; CI smoke uses 8")
     ap.add_argument("--out", type=Path,
-                    default=ARTIFACTS / f"BENCH_{PR}.json",
-                    help="artifact path (CI writes outside the tree so "
-                         "the committed baseline stays put)")
+                    default=ROOT / f"BENCH_{PR}.json",
+                    help="output path (default: repo-root BENCH_%d.json; "
+                         "CI writes outside the tree so the committed "
+                         "baseline stays put)" % PR)
+    ap.add_argument("--no-gate", action="store_true",
+                    help="skip the >25%% dense-column regression gate")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="explicit baseline file (default: newest "
+                         "committed BENCH_<n>.json)")
     args = ap.parse_args(argv)
     if jax.device_count() < args.p:
         print(f"need {args.p} devices (set "
@@ -166,6 +226,21 @@ def main(argv=None):
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(record, indent=1))
     print(f"perf_trajectory,wrote={args.out}")
+    if not args.no_gate:
+        base_path = args.baseline if args.baseline is not None \
+            else find_baseline(exclude=args.out)
+        if base_path is None:
+            print("perf_trajectory,gate=skipped (no committed baseline)")
+        else:
+            failures = check_regression(
+                record, json.loads(base_path.read_text()))
+            if failures:
+                print(f"perf_trajectory,gate=FAIL vs {base_path.name}:",
+                      file=sys.stderr)
+                for msg in failures:
+                    print(f"  {msg}", file=sys.stderr)
+                return 1
+            print(f"perf_trajectory,gate=ok vs {base_path.name}")
     return 0
 
 

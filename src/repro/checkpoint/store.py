@@ -32,6 +32,8 @@ import numpy as np
 
 import zlib as _zlib
 
+from repro.core import telemetry
+
 try:
     import zstandard as zstd
     _HAVE_ZSTD = True
@@ -94,6 +96,16 @@ def _path_str(p):
 def save_checkpoint(directory, step: int, tree, extra: dict | None = None,
                     keep: int = 3):
     """Synchronous atomic save of a pytree of arrays."""
+    with telemetry.get_tracer().span("checkpoint.save", cat="checkpoint",
+                                     step=int(step)) as sp:
+        out = _save_checkpoint_impl(directory, step, tree, extra, keep)
+        sp.set(path=str(out))
+        telemetry.metrics().counter("checkpoint.saves").inc()
+        return out
+
+
+def _save_checkpoint_impl(directory, step: int, tree,
+                          extra: dict | None = None, keep: int = 3):
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
@@ -199,6 +211,16 @@ def restore_checkpoint(directory, step: int | None, target_tree,
 
 def _restore_step(directory: Path, step: int, target_tree,
                   shardings=None, verify: bool = True):
+    with telemetry.get_tracer().span("checkpoint.restore", cat="checkpoint",
+                                     step=int(step), verify=verify):
+        out = _restore_step_impl(directory, step, target_tree, shardings,
+                                 verify)
+        telemetry.metrics().counter("checkpoint.restores").inc()
+        return out
+
+
+def _restore_step_impl(directory: Path, step: int, target_tree,
+                       shardings=None, verify: bool = True):
     base = directory / f"step_{step:08d}"
     with open(base / "manifest.json") as f:
         manifest = json.load(f)

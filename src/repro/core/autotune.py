@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from . import telemetry
 from .cache import cart_create, device_fingerprint
 from .dims import max_dims
 from .factorized import _as_tuple
@@ -318,6 +319,11 @@ def autotune_stats() -> dict[str, int]:
     return dict(_STATS)
 
 
+# The autotuner slice of the unified telemetry snapshot
+# (core.telemetry.metrics_snapshot -> "autotune.*").
+telemetry.register_stats_provider("autotune", autotune_stats)
+
+
 def reset_autotune_stats() -> None:
     for k in _STATS:
         _STATS[k] = 0
@@ -489,19 +495,36 @@ def measured_links(record: dict) -> tuple[LinkModel, ...] | None:
 # Measurement
 # ---------------------------------------------------------------------------
 
-def _timed(fn, x, *, warmup: int, repeats: int) -> float:
+def _timed(fn, x, *, warmup: int, repeats: int, **span_attrs) -> float:
     """Median wall seconds of ``fn(x)``; every execution (warmup included)
-    is counted in the timing_executions stat."""
-    for _ in range(max(0, warmup)):
-        jax.block_until_ready(fn(x))
-        _STATS["timing_executions"] += 1
-    ts = []
-    for _ in range(max(1, repeats)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(x))
-        ts.append(time.perf_counter() - t0)
-        _STATS["timing_executions"] += 1
-    return statistics.median(ts)
+    is counted in the timing_executions stat.
+
+    Emits one ``autotune.measure`` telemetry span per candidate (attrs
+    from ``span_attrs`` plus the measured median).  The tracer is forced
+    off *around the executions themselves* so a sweep run under tracing
+    still measures the fused jit path — the stepped per-round traced
+    path must never contaminate a tuning record, and measurement
+    repetitions must not feed the drift detector they calibrate."""
+    tr = telemetry.get_tracer()
+    with tr.span("autotune.measure", cat="autotune", warmup=warmup,
+                 repeats=repeats, **span_attrs) as sp:
+        was_enabled = tr.enabled
+        tr.enabled = False
+        try:
+            for _ in range(max(0, warmup)):
+                jax.block_until_ready(fn(x))
+                _STATS["timing_executions"] += 1
+            ts = []
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(x))
+                ts.append(time.perf_counter() - t0)
+                _STATS["timing_executions"] += 1
+        finally:
+            tr.enabled = was_enabled
+        med = statistics.median(ts)
+        sp.set(median_us=med * 1e6)
+    return med
 
 
 def _operand(p: int, block_shape, dtype):
@@ -593,12 +616,7 @@ def _chunk_candidates(dims, links, block_bytes, max_chunks: int):
     return sorted(cands)
 
 
-def autotune(mesh: Mesh, axis_names, block_shape, dtype, *,
-             variant: str = "natural", max_chunks: int = 8,
-             round_orders=None, include_factorizations: bool = True,
-             warmup: int = 2, repeats: int = 5,
-             budget_seconds: float = 20.0, fit_links: bool = True,
-             db: TuningDB | None = None, verbose: bool = False):
+def autotune(mesh: Mesh, axis_names, block_shape, dtype, **kwargs):
     """Measure candidate configurations, persist the winner, return its plan.
 
     The returned :class:`~repro.core.plan.A2APlan` is exactly what any
@@ -609,7 +627,25 @@ def autotune(mesh: Mesh, axis_names, block_shape, dtype, *,
     ``budget_seconds`` bounds the whole search: once exceeded, remaining
     candidates are recorded as skipped (never silently dropped) — the
     direct and factorized baselines are always measured.
+
+    The whole sweep runs under one ``autotune.search`` telemetry span
+    (child ``autotune.measure`` spans per candidate) — see
+    ``core.telemetry``.
     """
+    axes = _as_tuple(axis_names)
+    with telemetry.get_tracer().span(
+            "autotune.search", cat="autotune", kind="dense",
+            axes=",".join(axes),
+            dims="x".join(str(int(mesh.shape[a])) for a in axes)):
+        return _autotune_impl(mesh, axes, block_shape, dtype, **kwargs)
+
+
+def _autotune_impl(mesh: Mesh, axis_names, block_shape, dtype, *,
+                   variant: str = "natural", max_chunks: int = 8,
+                   round_orders=None, include_factorizations: bool = True,
+                   warmup: int = 2, repeats: int = 5,
+                   budget_seconds: float = 20.0, fit_links: bool = True,
+                   db: TuningDB | None = None, verbose: bool = False):
     from .plan import plan_all_to_all
     from .tuning import default_links
 
@@ -654,7 +690,9 @@ def autotune(mesh: Mesh, axis_names, block_shape, dtype, *,
         plan = plan_all_to_all(mesh, axes, block_shape, dtype,
                                backend=backend, variant=variant,
                                round_order=order, n_chunks=n)
-        med = _timed(plan.host_fn(mesh), x, warmup=warmup, repeats=repeats)
+        med = _timed(plan.host_fn(mesh), x, warmup=warmup, repeats=repeats,
+                     backend=backend, n_chunks=n,
+                     round_order=",".join(str(o) for o in order))
         table.append({"backend": backend, "dims": list(dims),
                       "round_order": list(order), "n_chunks": n,
                       "median_us": med * 1e6, "eligible": True})
@@ -681,7 +719,8 @@ def autotune(mesh: Mesh, axis_names, block_shape, dtype, *,
             plan = plan_all_to_all(aux_mesh, aux_names, block_shape, dtype,
                                    backend="factorized", variant=variant)
             med = _timed(plan.host_fn(aux_mesh), x, warmup=warmup,
-                         repeats=repeats)
+                         repeats=repeats, backend="factorized",
+                         dims="x".join(str(s) for s in dims_ff))
             table.append({"backend": "factorized", "dims": list(dims_ff),
                           "round_order": list(range(len(dims_ff))),
                           "n_chunks": 1, "median_us": med * 1e6,
@@ -737,11 +776,7 @@ def _sparse_counts_operand(p: int, max_count: int, density: float,
 
 
 def autotune_ragged(mesh: Mesh, axis_names, row_shape, dtype, *,
-                    max_count: int, density: float,
-                    avg_count: float | None = None,
-                    variant: str = "natural", warmup: int = 2,
-                    repeats: int = 5, seed: int = 0,
-                    db: TuningDB | None = None, verbose: bool = False):
+                    max_count: int, density: float, **kwargs):
     """Measure dense-bucketed ragged vs sparse-neighborhood Alltoallv on
     a representative sparse operand and persist the winner.
 
@@ -753,8 +788,26 @@ def autotune_ragged(mesh: Mesh, axis_names, row_shape, dtype, *,
     dense autotuner: no analytic shortcut into a measured record).
     Returns the winning plan; the record is consumed by
     :func:`lookup_ragged_measured` (e.g. the dropless-MoE plan chooser
-    under ``a2a_backend="autotune"``).
+    under ``a2a_backend="autotune"``).  The sweep runs under one
+    ``autotune.search`` telemetry span like the dense search.
     """
+    axes = _as_tuple(axis_names)
+    with telemetry.get_tracer().span(
+            "autotune.search", cat="autotune", kind="ragged",
+            axes=",".join(axes), density=float(density),
+            dims="x".join(str(int(mesh.shape[a])) for a in axes)):
+        return _autotune_ragged_impl(mesh, axes, row_shape, dtype,
+                                     max_count=max_count, density=density,
+                                     **kwargs)
+
+
+def _autotune_ragged_impl(mesh: Mesh, axis_names, row_shape, dtype, *,
+                          max_count: int, density: float,
+                          avg_count: float | None = None,
+                          variant: str = "natural", warmup: int = 2,
+                          repeats: int = 5, seed: int = 0,
+                          db: TuningDB | None = None,
+                          verbose: bool = False):
     from .comm import torus_comm
     from .ragged import next_pow2
 
@@ -783,7 +836,7 @@ def autotune_ragged(mesh: Mesh, axis_names, row_shape, dtype, *,
     for backend, plan in (("ragged", ragged_plan), ("sparse", sparse_plan)):
         fn = plan.host_fn(mesh)
         med = _timed(lambda _: fn(x, counts), None, warmup=warmup,
-                     repeats=repeats)
+                     repeats=repeats, backend=backend)
         table.append({"backend": backend, "median_us": med * 1e6})
         if verbose:
             print(f"[autotune_ragged] {backend}: {med * 1e6:.1f}us")

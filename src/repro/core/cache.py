@@ -252,3 +252,10 @@ def cache_stats() -> dict[str, int]:
     out["size"] = len(_REGISTRY)
     out["capacity"] = _REGISTRY.capacity
     return out
+
+
+# The factorization-cache slice of the unified telemetry snapshot
+# (core.telemetry.metrics_snapshot -> "factorization.*").
+from . import telemetry as _telemetry                       # noqa: E402
+
+_telemetry.register_stats_provider("factorization", cache_stats)

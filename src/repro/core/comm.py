@@ -50,6 +50,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import plan as _planmod
+from . import telemetry
 from .cache import (
     LRUCache,
     TorusFactorization,
@@ -765,22 +766,28 @@ class TorusComm:
         dims2 = tuple(reversed(dims_create(p2, d)))
         names = self.axis_names if len(self.axis_names) == len(dims2) \
             else tuple(f"t{i}" for i in range(len(dims2)))
-        source = dims2 if survivors is None \
-            else cart_create(survivors, dims2, names)
-        old = {"dims": self.dims, "axes": self.axis_names, "p": self.p,
-               "dev_key": self.dev_key}
-        # invalidate exactly the dead comm's plan slice + fact refs
-        self.free()
-        fresh = torus_comm(source, names, variant=self.variant, db=self._db)
-        fresh.rebuilt_from = {"dims": list(old["dims"]),
-                              "axes": list(old["axes"]), "p": old["p"]}
-        if migrate_tuning and old["dev_key"] is not None \
-                and fresh.dev_key is not None:
-            from .autotune import get_default_db, migrate_records
-            db = self._db if self._db is not None else get_default_db()
-            fresh.tuning_migrated = migrate_records(
-                db, old["dev_key"], fresh.dev_key, fresh.dims,
-                fresh.axis_names)
+        with telemetry.get_tracer().span(
+                "comm.rebuild", cat="comm", p_old=self.p, p_new=p2, d=d,
+                dims_old=str(self.dims), dims_new=str(dims2)) as sp:
+            source = dims2 if survivors is None \
+                else cart_create(survivors, dims2, names)
+            old = {"dims": self.dims, "axes": self.axis_names, "p": self.p,
+                   "dev_key": self.dev_key}
+            # invalidate exactly the dead comm's plan slice + fact refs
+            self.free()
+            fresh = torus_comm(source, names, variant=self.variant,
+                               db=self._db)
+            fresh.rebuilt_from = {"dims": list(old["dims"]),
+                                  "axes": list(old["axes"]), "p": old["p"]}
+            if migrate_tuning and old["dev_key"] is not None \
+                    and fresh.dev_key is not None:
+                from .autotune import get_default_db, migrate_records
+                db = self._db if self._db is not None else get_default_db()
+                fresh.tuning_migrated = migrate_records(
+                    db, old["dev_key"], fresh.dev_key, fresh.dims,
+                    fresh.axis_names)
+                sp.set(tuning_migrated=fresh.tuning_migrated)
+        telemetry.metrics().counter("comm.rebuilds").inc()
         return fresh
 
     # -- introspection ------------------------------------------------------
@@ -818,8 +825,11 @@ class TorusComm:
 def unified_stats(db=None) -> dict:
     """Registry-wide cache state in one dict: factorization descriptors
     (``cache_stats``), the plan LRU (``plan_cache_stats``), autotune
-    counters (``autotune_stats``), the tuning-DB identity/generation, and
-    the communicator registry itself."""
+    counters (``autotune_stats``), the tuning-DB identity/generation, the
+    communicator registry itself, and the merged telemetry view — the
+    flat ``MetricsRegistry`` snapshot (every registered stats provider
+    under its namespace plus ad-hoc counters), tracer state, and the
+    measured-vs-model drift summary."""
     from .autotune import autotune_stats, get_default_db
     from .plan import plan_cache_stats
     db = db if db is not None else get_default_db()
@@ -829,6 +839,11 @@ def unified_stats(db=None) -> dict:
         "autotune": autotune_stats(),
         "tuning_db": {"path": db.path_key, "generation": db.generation()},
         "comms": comm_registry_stats(),
+        "telemetry": {
+            "metrics": telemetry.metrics_snapshot(),
+            "tracer": telemetry.get_tracer().stats(),
+            "drift": telemetry.drift_detector().summary(),
+        },
     }
 
 
@@ -914,6 +929,11 @@ def comm_registry_stats() -> dict:
     out["size"] = len(_COMMS)
     out["capacity"] = _COMMS.capacity
     return out
+
+
+# The communicator-registry slice of the unified telemetry snapshot
+# (core.telemetry.metrics_snapshot -> "comms.*").
+telemetry.register_stats_provider("comms", comm_registry_stats)
 
 
 __all__ = [

@@ -55,6 +55,7 @@ from __future__ import annotations
 import math
 import warnings
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -130,12 +131,63 @@ def _factorized_impl(x, axis_names, *, variant: Variant = "natural",
     A = x.reshape(tuple(reversed(dims)) + block)
     pos = lambda m: d - 1 - m  # array axis holding torus dimension m
 
+    # named_scope per round: free at runtime, but the device profile
+    # (jax.profiler) shows each dimension-wise round as its own scope —
+    # lining the XLA timeline up with the host-side telemetry spans.
     if variant == "natural":
         for k in order:
-            A = lax.all_to_all(A, axis_names[k], split_axis=pos(k),
-                               concat_axis=pos(k), tiled=False)
+            with jax.named_scope(f"a2a_round[{axis_names[k]}]"):
+                A = lax.all_to_all(A, axis_names[k], split_axis=pos(k),
+                                   concat_axis=pos(k), tiled=False)
     elif variant == "paper":
         for k in order:
+            with jax.named_scope(f"a2a_round[{axis_names[k]}]"):
+                perm = ([pos(k)]
+                        + [pos(m) for m in range(k + 1, d)]
+                        + [pos(m) for m in range(k - 1, -1, -1)]
+                        + [d + i for i in range(nb)])
+                inv = tuple(int(i) for i in np.argsort(perm))
+                A = A.transpose(perm)
+                A = lax.all_to_all(A, axis_names[k], split_axis=0,
+                                   concat_axis=0, tiled=False)
+                A = A.transpose(inv)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    return A.reshape((p,) + block)
+
+
+def _factorized_round_impl(x, axis_names, k: int, *,
+                           variant: Variant = "natural"):
+    """Exactly one dimension-wise round (active round index ``k``) of
+    :func:`_factorized_impl`.
+
+    Every round returns the buffer to the canonical ``(p, *block)``
+    layout, so composing the per-round kernels over any ``round_order``
+    is bit-identical to the fused d-round kernel — this is what lets the
+    telemetry-traced execution path dispatch one jitted step per round
+    (each with its own measured host span) without changing results.
+    The split costs the per-round reshape fusion XLA would otherwise do,
+    which is why the stepped path only runs when tracing is enabled.
+    """
+    axis_names = _as_tuple(axis_names)
+    dims = _axis_sizes(axis_names)
+    p = math.prod(dims)
+    if x.shape[0] != p:
+        raise ValueError(f"leading dim {x.shape[0]} != prod(dims)={p} ({dims})")
+    axis_names, dims = _skip_trivial(axis_names, dims)
+    d = len(dims)
+    if not 0 <= k < d:
+        raise ValueError(f"round index {k} outside 0..{d - 1}")
+    block = x.shape[1:]
+    nb = len(block)
+    A = x.reshape(tuple(reversed(dims)) + block)
+    pos = lambda m: d - 1 - m
+    with jax.named_scope(f"a2a_round[{axis_names[k]}]"):
+        if variant == "natural":
+            A = lax.all_to_all(A, axis_names[k], split_axis=pos(k),
+                               concat_axis=pos(k), tiled=False)
+        elif variant == "paper":
             perm = ([pos(k)]
                     + [pos(m) for m in range(k + 1, d)]
                     + [pos(m) for m in range(k - 1, -1, -1)]
@@ -145,9 +197,8 @@ def _factorized_impl(x, axis_names, *, variant: Variant = "natural",
             A = lax.all_to_all(A, axis_names[k], split_axis=0, concat_axis=0,
                                tiled=False)
             A = A.transpose(inv)
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
     return A.reshape((p,) + block)
 
 

@@ -168,6 +168,13 @@ class FaultInjector:
 
         self._installed[id(plan)] = (plan, orig)
         plan.host_fn = host_fn          # instance attr shadows the method
+        # Telemetry hook: when the tracer steps a factorized plan
+        # round-by-round, each round calls this check *inside* its span,
+        # so an injected slow round shows up as per-round drift (the
+        # host_fn wrapper above fires before the span opens and would be
+        # invisible to round timing).  Distinct label — round-level specs
+        # target "<label>.round" without perturbing outer call counts.
+        plan._round_fault_check = lambda: self.check(f"{label}.round")
         return plan
 
     def uninstall(self, plan=None) -> None:
@@ -176,6 +183,7 @@ class FaultInjector:
             else [self._installed.pop(k) for k in list(self._installed)]
         for target, _orig in items:
             target.__dict__.pop("host_fn", None)
+            target.__dict__.pop("_round_fault_check", None)
 
 
 # ---------------------------------------------------------------------------

@@ -52,12 +52,14 @@ identical torus, cached in the same registry — see ``core.ragged``.
 from __future__ import annotations
 
 import math
+import time
 import warnings
 from typing import Callable
 
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import telemetry
 from .cache import (
     LRUCache,
     TorusFactorization,
@@ -69,6 +71,7 @@ from .factorized import (
     _direct_impl,
     _direct_tiled_impl,
     _factorized_impl,
+    _factorized_round_impl,
     _factorized_tiled_impl,
     _skip_trivial,
 )
@@ -79,6 +82,7 @@ from .tuning import (
     Schedule,
     choose_algorithm,
     default_links,   # noqa: F401  (re-exported; moved to core.tuning)
+    per_axis_round_seconds,
     predict_direct,
     predict_factorized,
     predict_overlapped,
@@ -128,6 +132,7 @@ class A2APlan:
         self._from_cache = False
         self._fetches = 1
         self._host_fns: dict[Mesh, object] = {}
+        self._round_fns: dict[Mesh, list] = {}
 
     # -- identity ----------------------------------------------------------
 
@@ -216,7 +221,13 @@ class A2APlan:
         operand (``x[r, i]`` = rank r's block for rank i), the benchmark
         harness form.  The jitted callable is cached on the plan keyed by
         mesh *value* (Mesh is hashable), so plan reuse amortizes
-        retracing even when the caller rebuilds an equal Mesh."""
+        retracing even when the caller rebuilds an equal Mesh.
+
+        The returned callable checks the telemetry tracer per call: off
+        (the default), it dispatches the cached fused jit directly; on,
+        factorized plans execute the *stepped* per-round path (one jitted
+        step per dimension-wise round — bit-exact, rounds commute) so
+        every round gets a measured span and a drift observation."""
         mesh = self._mesh if mesh is None else mesh
         if mesh is None:
             raise ValueError("plan was built without a Mesh; pass one")
@@ -229,7 +240,106 @@ class A2APlan:
 
             self._host_fns[mesh] = jax.jit(jax.shard_map(
                 local, mesh=mesh, in_specs=spec, out_specs=spec))
-        return self._host_fns[mesh]
+        fast = self._host_fns[mesh]
+
+        # The tracer singleton is never rebound (enable/disable mutate it
+        # in place), so bind it once here: the disabled fast path is one
+        # attribute load + branch per call, not a registry lookup.
+        tr = telemetry.get_tracer()
+
+        def run(x):
+            if not tr.enabled:
+                return fast(x)
+            return self._traced_execute(tr, mesh, fast, x)
+
+        return run
+
+    # -- telemetry-traced execution ----------------------------------------
+
+    def _drift_key(self) -> str:
+        """Stable drift-detector key: one time series per resolved plan
+        identity (axes x dims x backend x block)."""
+        dims = "x".join(str(s) for s in self.dims)
+        return (f"dense[{','.join(self.axis_names)}]{dims}:{self.backend}"
+                f":{self.block_bytes}")
+
+    def _per_axis_predictions(self) -> dict[str, float] | None:
+        """``{axis_name: model seconds}`` for the active rounds, or None
+        without a sized block (tiled plans carry no block shape)."""
+        if self.block_bytes is None:
+            return None
+        per_axis = per_axis_round_seconds(self.dims, self.links,
+                                          float(self.block_bytes))
+        return {name: t for name, Dk, t
+                in zip(self.axis_names, self.dims, per_axis) if Dk > 1}
+
+    def _round_host_fns(self, mesh):
+        """Per-round jitted host fns in forward round order — the
+        stepped traced path (factorized backend only)."""
+        if mesh not in self._round_fns:
+            import jax
+            spec = P(tuple(reversed(self.axis_names)))
+            names, sizes = _skip_trivial(self.axis_names, self.dims)
+            fns = []
+            for k in self.order:
+                def local(x, _k=k):
+                    return _factorized_round_impl(
+                        x[0], self.axis_names, _k,
+                        variant=self.variant)[None]
+                fns.append((k, names[k], sizes[k],
+                            jax.jit(jax.shard_map(
+                                local, mesh=mesh, in_specs=spec,
+                                out_specs=spec))))
+            self._round_fns[mesh] = fns
+        return self._round_fns[mesh]
+
+    def _traced_execute(self, tr, mesh, fast, x):
+        import jax
+        det = telemetry.drift_detector()
+        key = self._drift_key()
+        preds = self._per_axis_predictions()
+        predicted = self.schedule.predicted_seconds \
+            if self.schedule is not None \
+            else (sum(preds.values()) if preds else None)
+        telemetry.metrics().counter("plan.traced_executions").inc()
+        # Installed fault injectors (core.faults) expose a per-round
+        # guard so injected slow rounds land inside the round spans.
+        check = getattr(self, "_round_fault_check", None)
+        with tr.span("plan.execute", cat="plan", kind="dense",
+                     backend=self.backend, axes=",".join(self.axis_names),
+                     dims="x".join(str(s) for s in self.dims),
+                     predicted_seconds=predicted, tuned_from=self.tuned_from,
+                     drift_key=key) as ex:
+            t0 = time.perf_counter()
+            if self.backend == "factorized":
+                y = x
+                for k, name, Dk, fn in self._round_host_fns(mesh):
+                    pred_k = None if preds is None else preds.get(name)
+                    with tr.span("plan.round", cat="plan", axis=name,
+                                 round=k, dim=Dk,
+                                 predicted_seconds=pred_k):
+                        if check is not None:
+                            check()
+                        tr0 = time.perf_counter()
+                        y = jax.block_until_ready(fn(y))
+                        if pred_k:
+                            det.observe(f"{key}:axis={name}", pred_k,
+                                        time.perf_counter() - tr0)
+            else:
+                # direct = a single product-communicator round; overlap
+                # interleaves rounds across chunks — neither splits into
+                # host-steppable rounds, so one fused span covers them.
+                with tr.span("plan.round", cat="plan", axis="*",
+                             backend=self.backend, timing="fused",
+                             predicted_seconds=predicted):
+                    if check is not None:
+                        check()
+                    y = jax.block_until_ready(fast(x))
+            measured = time.perf_counter() - t0
+            ratio = det.observe(key, predicted, measured) \
+                if predicted else None
+            ex.set(measured_seconds=measured, drift_ratio=ratio)
+        return y
 
     # -- introspection -----------------------------------------------------
 
@@ -260,6 +370,8 @@ class A2APlan:
                       for l in self.links],
             "tuned_from": self.tuned_from,
             "measured": self.measured,
+            "drift_ratio": telemetry.drift_detector()
+            .drift_ratio(self._drift_key()),
             "cache": "hit" if self._from_cache else "miss",
         }
 
@@ -595,6 +707,7 @@ class RaggedA2APlan:
         self._from_cache = False
         self._fetches = 1
         self._host_fns: dict[Mesh, object] = {}
+        self._counts_fns: dict[Mesh, object] = {}
 
     # -- identity ----------------------------------------------------------
 
@@ -692,7 +805,13 @@ class RaggedA2APlan:
         """Jitted host-level ragged all-to-all over global ``(p, p,
         bucket, *row)`` data and ``(p, p)`` int32 counts operands
         (``x[r, i]`` = rank r's bucket window for rank i); returns the
-        exchanged windows plus per-rank recv counts."""
+        exchanged windows plus per-rank recv counts.
+
+        With the telemetry tracer enabled the two phases split at host
+        level — a measured ``ragged.counts`` span around the tiny int32
+        exchange, then the data rounds through the dense plan's traced
+        path (per-round spans for the factorized backend) — bit-exact
+        with the fused jit, which still serves the disabled path."""
         mesh = self.data._mesh if mesh is None else mesh
         if mesh is None:
             raise ValueError("plan was built without a Mesh; pass one")
@@ -709,7 +828,69 @@ class RaggedA2APlan:
             self._host_fns[mesh] = jax.jit(jax.shard_map(
                 local, mesh=mesh, in_specs=(x_spec, c_spec),
                 out_specs=(x_spec, c_spec)))
-        return self._host_fns[mesh]
+        fast = self._host_fns[mesh]
+
+        tr = telemetry.get_tracer()   # stable singleton; bind once
+
+        def run(x, c):
+            if not tr.enabled:
+                return fast(x, c)
+            return self._traced_execute(tr, mesh, x, c)
+
+        return run
+
+    # -- telemetry-traced execution ----------------------------------------
+
+    def _drift_key(self) -> str:
+        dims = "x".join(str(s) for s in self.dims)
+        return (f"ragged[{','.join(self.axis_names)}]{dims}"
+                f":{self.backend}:b{self.bucket}")
+
+    def _counts_host_fn(self, mesh):
+        """Jitted counts phase alone: global ``(p, p)`` send counts ->
+        global ``(p, p)`` per-rank recv counts."""
+        if mesh not in self._counts_fns:
+            import jax
+            from .ragged import (_counts_matrix_impl,
+                                 _recv_counts_from_matrix)
+            spec = P(tuple(reversed(self.axis_names)))
+
+            def local(c):       # c: (1, p) per device
+                matrix = _counts_matrix_impl(c[0], self.counts_plan)
+                return _recv_counts_from_matrix(
+                    matrix, self.axis_names)[None]
+
+            self._counts_fns[mesh] = jax.jit(jax.shard_map(
+                local, mesh=mesh, in_specs=spec, out_specs=spec))
+        return self._counts_fns[mesh]
+
+    def _traced_execute(self, tr, mesh, x, c):
+        import jax
+        det = telemetry.drift_detector()
+        key = self._drift_key()
+        with tr.span("plan.execute", cat="plan", kind="ragged",
+                     backend=self.backend,
+                     axes=",".join(self.axis_names),
+                     dims="x".join(str(s) for s in self.dims),
+                     bucket=self.bucket,
+                     predicted_seconds=self.predicted_seconds,
+                     tuned_from=self.tuned_from, drift_key=key) as ex:
+            t0 = time.perf_counter()
+            counts_sched = self.counts_plan.schedule
+            with tr.span("ragged.counts", cat="plan",
+                         backend=self.counts_plan.backend,
+                         block_bytes=self.counts_plan.block_bytes,
+                         predicted_seconds=None if counts_sched is None
+                         else counts_sched.predicted_seconds):
+                rc = jax.block_until_ready(self._counts_host_fn(mesh)(c))
+            self.data.host_fn(mesh)           # ensure the fused jit exists
+            recv = self.data._traced_execute(
+                tr, mesh, self.data._host_fns[mesh], x)
+            measured = time.perf_counter() - t0
+            ratio = det.observe(key, self.predicted_seconds, measured) \
+                if self.predicted_seconds else None
+            ex.set(measured_seconds=measured, drift_ratio=ratio)
+        return recv, rc
 
     # -- introspection -----------------------------------------------------
 
@@ -752,6 +933,8 @@ class RaggedA2APlan:
                       for l in self.data.links],
             "tuned_from": self.tuned_from,
             "measured": self.data.measured,
+            "drift_ratio": telemetry.drift_detector()
+            .drift_ratio(self._drift_key()),
             "cache": "hit" if self._from_cache else "miss",
         }
 
@@ -1052,7 +1235,47 @@ class SparseA2APlan:
             self._host_fns[mesh] = jax.jit(jax.shard_map(
                 local, mesh=mesh, in_specs=(x_spec, c_spec),
                 out_specs=(x_spec, c_spec), check_vma=False))
-        return self._host_fns[mesh]
+        fast = self._host_fns[mesh]
+
+        tr = telemetry.get_tracer()   # stable singleton; bind once
+
+        def run(x, c):
+            if not tr.enabled:
+                return fast(x, c)
+            return self._traced_execute(tr, fast, x, c)
+
+        return run
+
+    # -- telemetry-traced execution ----------------------------------------
+
+    def _drift_key(self) -> str:
+        dims = "x".join(str(s) for s in self.dims)
+        return (f"sparse[{','.join(self.axis_names)}]{dims}"
+                f":b{self.bucket}:rho{self.expected_density}")
+
+    def _traced_execute(self, tr, fast, x, c):
+        """One measured execute span around the fused jit — the sparse
+        rounds' ``lax.cond``-guarded lanes cannot be stepped at host
+        level (the skip predicates live inside the trace), so per-round
+        device attribution comes from the ``named_scope`` annotations in
+        the profile, not host spans."""
+        import jax
+        det = telemetry.drift_detector()
+        key = self._drift_key()
+        with tr.span("plan.execute", cat="plan", kind="sparse",
+                     backend="sparse", axes=",".join(self.axis_names),
+                     dims="x".join(str(s) for s in self.dims),
+                     bucket=self.bucket,
+                     expected_density=self.expected_density,
+                     predicted_seconds=self.predicted_seconds,
+                     drift_key=key, timing="fused") as ex:
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fast(x, c))
+            measured = time.perf_counter() - t0
+            ratio = det.observe(key, self.predicted_seconds, measured) \
+                if self.predicted_seconds else None
+            ex.set(measured_seconds=measured, drift_ratio=ratio)
+        return out
 
     # -- introspection -----------------------------------------------------
 
@@ -1099,6 +1322,8 @@ class SparseA2APlan:
                       for l in self.links],
             "tuned_from": None,
             "measured": None,
+            "drift_ratio": telemetry.drift_detector()
+            .drift_ratio(self._drift_key()),
             "cache": "hit" if self._from_cache else "miss",
         }
 
@@ -1376,8 +1601,13 @@ class KVMigrationPlan:
     def host_fn(self, mesh: Mesh | None = None):
         """Jitted host-level exchange over global ``(p, p, bucket,
         *row)`` data and ``(p, p)`` int32 counts operands — the one
-        collective a serving tick executes."""
+        collective a serving tick executes.  Telemetry spans and drift
+        tracking ride the inner ragged/sparse plan's instrumented
+        path."""
         return self.inner.host_fn(mesh)
+
+    def _drift_key(self) -> str:
+        return self.inner._drift_key()
 
     # -- introspection -----------------------------------------------------
 
@@ -1409,6 +1639,8 @@ class KVMigrationPlan:
             "expected_density": self.expected_density,
             "predicted_seconds": self.predicted_seconds,
             "tuned_from": self.tuned_from,
+            "drift_ratio": telemetry.drift_detector()
+            .drift_ratio(self._drift_key()),
             "cache": "hit" if self._from_cache else "miss",
         }
 
@@ -1567,3 +1799,8 @@ def plan_cache_entries() -> list[A2APlan]:
     """Snapshot of the live plans, LRU-oldest first (for logging/artifacts;
     does not touch recency or stats)."""
     return _PLANS.values()
+
+
+# The plan-cache slice of the unified telemetry snapshot
+# (core.telemetry.metrics_snapshot -> "plan_cache.*").
+telemetry.register_stats_provider("plan_cache", plan_cache_stats)

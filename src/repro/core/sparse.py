@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -185,26 +186,31 @@ def _sparse_rounds_impl(x, matrix, *, axis_names, dims, order, masks):
     nonzero = matrix > 0
 
     for e, k in enumerate(order):
-        Dk = sizes[k]
-        ax = pos(k)
-        me = lax.axis_index(names[k])
-        out = jnp.zeros_like(A)
-        keep = lax.dynamic_slice_in_dim(A, me, 1, ax)
-        out = lax.dynamic_update_slice_in_dim(out, keep, me, ax)
-        for delta in range(1, Dk):
-            mask = jnp.asarray(masks[e][delta - 1])
-            pred = jnp.any(nonzero & mask)
-            perm = [(i, (i + delta) % Dk) for i in range(Dk)]
+        # named_scope labels each round (and its peer lanes) in device
+        # profiles — free at runtime, visible in jax.profiler traces.
+        with jax.named_scope(f"sparse_round[{names[k]}]"):
+            Dk = sizes[k]
+            ax = pos(k)
+            me = lax.axis_index(names[k])
+            out = jnp.zeros_like(A)
+            keep = lax.dynamic_slice_in_dim(A, me, 1, ax)
+            out = lax.dynamic_update_slice_in_dim(out, keep, me, ax)
+            for delta in range(1, Dk):
+                mask = jnp.asarray(masks[e][delta - 1])
+                pred = jnp.any(nonzero & mask)
+                perm = [(i, (i + delta) % Dk) for i in range(Dk)]
 
-            def lane(o, A=A, me=me, delta=delta, Dk=Dk, ax=ax, perm=perm,
-                     name=names[k]):
-                piece = lax.dynamic_slice_in_dim(A, (me + delta) % Dk, 1, ax)
-                got = lax.ppermute(piece, name, perm)
-                return lax.dynamic_update_slice_in_dim(
-                    o, got, (me - delta) % Dk, ax)
+                def lane(o, A=A, me=me, delta=delta, Dk=Dk, ax=ax,
+                         perm=perm, name=names[k]):
+                    piece = lax.dynamic_slice_in_dim(
+                        A, (me + delta) % Dk, 1, ax)
+                    got = lax.ppermute(piece, name, perm)
+                    return lax.dynamic_update_slice_in_dim(
+                        o, got, (me - delta) % Dk, ax)
 
-            out = lax.cond(pred, lane, lambda o: o, out)
-        A = out
+                with jax.named_scope(f"lane[delta={delta}]"):
+                    out = lax.cond(pred, lane, lambda o: o, out)
+            A = out
 
     return A.reshape(x.shape)
 

@@ -119,6 +119,27 @@ def predict_factorized(dims, links, block_bytes: float, p: int) -> float:
     return t
 
 
+def per_axis_round_seconds(dims, links, block_bytes: float,
+                           p: int | None = None) -> tuple[float, ...]:
+    """:func:`predict_factorized`'s per-round terms, unsummed.
+
+    One entry per torus dimension, in axis order (size-1 dimensions are
+    no-op rounds and contribute ``0.0``), so the vector sums exactly to
+    ``predict_factorized``.  This is the model side of the telemetry
+    drift check: each dimension-wise round's *measured* span duration is
+    compared against its entry here (``core.telemetry.DriftDetector``),
+    and the apportioned round spans of non-stepped backends split the
+    measured wall time in these proportions.
+    """
+    links = per_axis_links(links, len(dims))
+    p = math.prod(dims) if p is None else p
+    return tuple(
+        0.0 if Dk == 1
+        else (Dk - 1) * (link.alpha + (p // Dk) * block_bytes
+                         / link.bandwidth)
+        for Dk, link in zip(dims, links))
+
+
 def predict_direct(p: int, block_bytes: float, link: LinkModel) -> float:
     """Direct algorithm: p-1 individual messages of one block each."""
     return (p - 1) * (link.alpha + block_bytes / link.bandwidth)

@@ -35,6 +35,7 @@ from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, \
     input_specs
 from repro.core.hlo_inspect import (collective_bytes_by_stride,
                                     loop_aware_analysis, parse_hlo)
+from repro.core import telemetry
 from repro.core.autotune import autotune_stats
 from repro.core.comm import unified_stats
 from repro.core.plan import plan_cache_entries, plan_cache_stats
@@ -217,7 +218,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         lowered = jax.jit(serve).lower(*args)
 
     t_lower = time.time() - t0
-    compiled = lowered.compile()
+    with telemetry.get_tracer().span("dryrun.compile", cat="dryrun",
+                                     arch=arch, shape=shape_name,
+                                     mesh=mesh_kind):
+        compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
@@ -312,6 +316,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         # plan / autotune / tuning-DB / comm registries in one dict) —
         # what a single comm.stats() call reports at serving time.
         "a2a_comm_stats": unified_stats(),
+        # Per-cell telemetry snapshot: the merged metrics registry (every
+        # registered stats provider under its namespace), tracer state,
+        # and the measured-vs-model drift summary.  In a dry run the
+        # drift table is empty (compile-only paths never execute), but
+        # the snapshot documents the cell's cache/plan traffic the same
+        # way a production process would export it.
+        "a2a_telemetry": {
+            "metrics": telemetry.metrics_snapshot(),
+            "tracer": telemetry.get_tracer().stats(),
+            "drift": telemetry.drift_detector().summary(),
+        },
     }
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "

@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import telemetry
+
 
 @dataclass
 class Request:
@@ -324,7 +326,10 @@ class ContinuousBatcher:
             if _finished(req):
                 self.done[req.rid] = list(req.generated)
                 self.slots[b] = None                   # free -> re-admit
+                telemetry.metrics().counter(
+                    "serving.requests_completed").inc()
         self.ticks += 1
+        telemetry.metrics().counter("serving.decode_ticks").inc()
         return True
 
     def run(self, max_ticks: int = 100_000):
@@ -689,60 +694,88 @@ class DisaggregatedServer:
         """One serving tick; returns False once the system is drained."""
         if self.pending == 0:
             return False
-        # 1. admission, throttled by decode headroom: never release more
-        # prompts than the decode domain can absorb beyond what is
-        # already in flight through prefill/migration.
-        headroom = self.batcher.max_batch - self.batcher.pending \
-            - len(self.staged) - sum(w.active for w in self.workers)
-        budget = min(max(0, headroom),
-                     sum(w.free_slots for w in self.workers))
-        for req in self.admission.admit(budget):
-            # least-loaded prefill worker = the placement router
-            worker = max(self.workers, key=lambda w: w.free_slots)
-            assert worker.admit(req)
-        # 2. prefill chunks; completed prompts stage for migration (a
-        # request finished by its very first token skips the decode
-        # domain entirely).
-        for src, worker in enumerate(self.workers):
-            for req, rows, pos in worker.step():
-                if _finished(req):
-                    self.done[req.rid] = list(req.generated)
-                    self.admission.release(req)
-                else:
-                    self.staged.append((src, req, rows, pos))
-        # 3. KV migration: at most one staged sequence per (src, dst)
-        # pair per tick (counts stay within the plan's max_count bound),
-        # gated on free decode slots — one collective for all of them.
-        free = self.batcher.free_slots
-        batch: dict[tuple[int, int], tuple] = {}
-        remaining = []
-        for entry in self.staged:
-            src, req, rows, pos = entry
-            dst = self.topology.n_prefill \
-                + self._rr_dst % self.topology.n_decode
-            if len(batch) < free and (src, dst) not in batch:
-                batch[(src, dst)] = entry
-                self._rr_dst += 1
-            else:
-                remaining.append(entry)
-        self.staged = remaining
-        if batch:
-            delivered = self.topology.migrate(
-                {pair: e[2] for pair, e in batch.items()})
-            for pair, (_, req, _, pos) in batch.items():
-                ok = self.batcher.admit_prefilled(
-                    req, np.asarray(delivered[pair]), pos,
-                    codec=self.codec)
-                assert ok, "migration was gated on free decode slots"
-                self._decoding[req.rid] = req
-        # 4. decode tick + completion bookkeeping.
-        self.batcher.step()
-        for rid, toks in list(self.batcher.done.items()):
-            if rid not in self.done:
-                self.done[rid] = toks
-            req = self._decoding.pop(rid, None)
-            if req is not None:
-                self.admission.release(req)
+        tr = telemetry.get_tracer()
+        with tr.span("serve.tick", cat="serving", tick=self.ticks):
+            # 1. admission, throttled by decode headroom: never release
+            # more prompts than the decode domain can absorb beyond what
+            # is already in flight through prefill/migration.
+            with tr.span("serve.admission", cat="serving") as sp:
+                headroom = self.batcher.max_batch - self.batcher.pending \
+                    - len(self.staged) - sum(w.active for w in self.workers)
+                budget = min(max(0, headroom),
+                             sum(w.free_slots for w in self.workers))
+                # drift backpressure: while any plan's measured round
+                # times sit above the cost-model threshold (the same
+                # signal the watchdog turns into a re-tune), halve the
+                # admission budget — don't pile new load onto a comm
+                # that is running off its tuned operating point.
+                drift = telemetry.drift_detector().summary()
+                if budget > 0 and any(v["drifted"] for v in drift.values()):
+                    budget //= 2
+                    telemetry.metrics().counter(
+                        "serving.admission_throttled").inc()
+                    sp.set(drift_throttled=True)
+                admitted = 0
+                for req in self.admission.admit(budget):
+                    # least-loaded prefill worker = the placement router
+                    worker = max(self.workers, key=lambda w: w.free_slots)
+                    assert worker.admit(req)
+                    admitted += 1
+                sp.set(budget=budget, admitted=admitted)
+            # 2. prefill chunks; completed prompts stage for migration (a
+            # request finished by its very first token skips the decode
+            # domain entirely).
+            with tr.span("serve.prefill", cat="serving") as sp:
+                completed = 0
+                for src, worker in enumerate(self.workers):
+                    for req, rows, pos in worker.step():
+                        completed += 1
+                        if _finished(req):
+                            self.done[req.rid] = list(req.generated)
+                            self.admission.release(req)
+                        else:
+                            self.staged.append((src, req, rows, pos))
+                sp.set(completed=completed)
+            # 3. KV migration: at most one staged sequence per (src, dst)
+            # pair per tick (counts stay within the plan's max_count
+            # bound), gated on free decode slots — one collective for
+            # all of them.
+            with tr.span("serve.kv_migrate", cat="serving") as sp:
+                free = self.batcher.free_slots
+                batch: dict[tuple[int, int], tuple] = {}
+                remaining = []
+                for entry in self.staged:
+                    src, req, rows, pos = entry
+                    dst = self.topology.n_prefill \
+                        + self._rr_dst % self.topology.n_decode
+                    if len(batch) < free and (src, dst) not in batch:
+                        batch[(src, dst)] = entry
+                        self._rr_dst += 1
+                    else:
+                        remaining.append(entry)
+                self.staged = remaining
+                if batch:
+                    delivered = self.topology.migrate(
+                        {pair: e[2] for pair, e in batch.items()})
+                    for pair, (_, req, _, pos) in batch.items():
+                        ok = self.batcher.admit_prefilled(
+                            req, np.asarray(delivered[pair]), pos,
+                            codec=self.codec)
+                        assert ok, "migration was gated on free decode slots"
+                        self._decoding[req.rid] = req
+                sp.set(migrated=len(batch))
+            # 4. decode tick + completion bookkeeping.
+            with tr.span("serve.decode", cat="serving") as sp:
+                self.batcher.step()
+                finished = 0
+                for rid, toks in list(self.batcher.done.items()):
+                    if rid not in self.done:
+                        self.done[rid] = toks
+                        finished += 1
+                    req = self._decoding.pop(rid, None)
+                    if req is not None:
+                        self.admission.release(req)
+                sp.set(finished=finished)
         self.ticks += 1
         return True
 

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
+from repro.core import telemetry
 from repro.core.faults import DeviceLossError, FaultError
 from repro.runtime.watchdog import StepTimer, StragglerWatchdog
 
@@ -72,6 +73,9 @@ class Trainer:
     # needed, and returns the shardings tree for the elastic restore
     rebuild_fn: Callable | None = None
     recoveries_done: int = 0
+    # drift-retune advisories from the telemetry DriftDetector, routed
+    # through the watchdog: list of (step, drift_key, Action)
+    retune_log: list = field(default_factory=list)
     _preempted: bool = False
 
     def __post_init__(self):
@@ -130,7 +134,8 @@ class Trainer:
         while self.step < end:
             batch = self.data.next()
             try:
-                with StepTimer() as t:
+                with StepTimer() as t, telemetry.get_tracer().span(
+                        "train.step", cat="trainer", step=self.step + 1):
                     # grad accumulation happens inside the jitted step
                     # (make_train_step(grad_accum=...)); cfg.grad_accum
                     # is plumbing for the builder, not a host loop.
@@ -165,6 +170,10 @@ class Trainer:
                     self.save(sync=True)
                     raise FaultError(f"watchdog abort at step "
                                      f"{self.step}: {action.reason}")
+                # advisory lane: measured-vs-model drift → "retune"
+                # recommendations (never retries/recoveries, never raises)
+                for key, act in self.watchdog.check_drift(step=self.step):
+                    self.retune_log.append((self.step, key, act))
             else:
                 verdict = self.watchdog.observe(self.step, t.seconds)
                 if verdict == "hang" and cfg.abort_on_hang:

@@ -25,8 +25,10 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
-VERDICTS = ("ok", "straggler", "hang", "device_loss")
-ACTIONS = ("continue", "retry", "recover", "abort")
+from ..core import telemetry
+
+VERDICTS = ("ok", "straggler", "hang", "device_loss", "drift")
+ACTIONS = ("continue", "retry", "recover", "abort", "retune")
 
 
 @dataclass(frozen=True)
@@ -35,8 +37,10 @@ class Action:
 
     ``kind``: "continue" (nothing to do), "retry" (re-attempt after
     ``backoff`` seconds), "recover" (checkpoint-now → rebuild comm →
-    restore → resume), or "abort" (checkpoint and raise for external
-    restart).
+    restore → resume), "abort" (checkpoint and raise for external
+    restart), or "retune" (measured round times drifted off the
+    plan's cost-model prediction — re-run autotune at the next
+    convenient boundary; advisory, never consumes retry budget).
     """
 
     kind: str
@@ -96,6 +100,12 @@ class EscalationPolicy:
             self.retries = 0
             self._incident_start = None
             return Action("continue")
+        if kind == "drift":
+            # Advisory: performance drifted off the tuned cost model.
+            # Not a fault — no incident opens, no retry/recovery budget
+            # is spent; the loop should schedule a re-tune.
+            return Action("retune",
+                          reason="measured/model drift above threshold")
         if self._incident_start is None:
             self._incident_start = now
         open_for = now - self._incident_start
@@ -157,6 +167,12 @@ class StragglerWatchdog:
         if self.events.maxlen is not None \
                 and len(self.events) == self.events.maxlen:
             self.events_dropped += 1
+            telemetry.metrics().counter("watchdog.events_dropped").inc()
+            telemetry.warn_once(
+                self, "_warned_events_dropped",
+                f"watchdog event window full (max_events="
+                f"{self.events.maxlen}); oldest anomaly events are being "
+                f"dropped — see watchdog.events_dropped for the count")
         self.events.append(event)
 
     def observe(self, step: int, seconds: float) -> str:
@@ -194,6 +210,26 @@ class StragglerWatchdog:
             self._record((f"action:{action.kind}", step, seconds,
                           action.reason))
         return action
+
+    def check_drift(self, detector=None, step: int | None = None):
+        """Poll the telemetry :class:`~repro.core.telemetry.DriftDetector`
+        for fresh re-tune recommendations and route each through the
+        escalation policy as a "drift" verdict (→ "retune" action,
+        advisory — no retry/recovery budget is consumed).
+
+        Returns a list of ``(drift_key, Action)`` pairs, one per newly
+        recommended key (empty when nothing drifted — the common case;
+        cheap enough to call every step).
+        """
+        detector = telemetry.drift_detector() if detector is None \
+            else detector
+        out = []
+        for rec in detector.recommendations():
+            self._record(("drift", step, rec["ratio"], rec["key"]))
+            action = self.escalation.decide("drift")
+            self.last_verdict = "drift"
+            out.append((rec["key"], action))
+        return out
 
     @property
     def median(self) -> float:

@@ -267,7 +267,8 @@ class TestStatsAndLifecycle:
         comm.all_to_all((4,), "float32", backend="direct")
         s = comm.stats()
         assert set(s) == {"factorization", "plans", "autotune",
-                          "tuning_db", "comms", "comm"}
+                          "tuning_db", "comms", "comm", "telemetry"}
+        assert {"metrics", "tracer", "drift"} <= set(s["telemetry"])
         assert s["plans"]["size"] == 1
         assert s["comm"]["plans_live"] == 1
         assert {"path", "generation"} <= set(s["tuning_db"])

@@ -154,6 +154,7 @@ class TestDescribeGolden:
             "tuned_from": None,     # explicit backend: no tuning provenance
             "measured": None,
             "cache": "miss",
+            "drift_ratio": None,    # no traced executions observed yet
         }
 
     def test_describe_is_json_serializable(self):
@@ -211,6 +212,7 @@ class TestRaggedPlan:
             "tuned_from": None,
             "measured": None,
             "cache": "miss",
+            "drift_ratio": None,
         }
         import json
         json.dumps(p.describe())
@@ -558,6 +560,7 @@ class TestKVMigrationPlan:
             "expected_density": 2.0 / 64,
             "tuned_from": "model",
             "cache": "miss",
+            "drift_ratio": None,
         }
         import json
         json.dumps(p.describe())

@@ -167,3 +167,23 @@ def test_serving_disaggregated_12dev():
     assert "bit-exact vs colocated" in out
     assert "OK serving rebuild: lost 4 ranks mid-stream" in out
     assert "OK serving: disaggregated prefill/decode bit-exact" in out
+
+
+@pytest.mark.slow
+def test_telemetry_12dev(tmp_path):
+    # Telemetry spine acceptance: with tracing on, factorized plans on
+    # d=2 (3x4) and d=3 (2x2x3) tori execute the stepped per-round path
+    # bit-exact with the fused jit, recording one plan.round span per
+    # dimension-wise round per execution; unified_stats() returns the
+    # merged MetricsRegistry snapshot; an injected FaultSpec slow round
+    # drives drift_ratio above threshold into a watchdog "retune"
+    # recommendation; and the tracer exports valid Chrome-trace JSON.
+    trace = tmp_path / "trace.json"
+    out = run_device_script("check_telemetry.py", 12, str(trace))
+    assert "OK span coverage d=2 (3x4): 3 executions x 2 rounds" in out
+    assert "OK span coverage d=3 (2x2x3): 3 executions x 3 rounds" in out
+    assert "OK unified snapshot" in out
+    assert "OK drift retune" in out
+    assert "OK export" in out
+    assert "OK check_telemetry" in out
+    assert trace.exists()
