@@ -42,6 +42,15 @@ The ``allgather[d=2]`` column measures the dimension-wise gather family
 rank, exchanged as d per-axis stages on the same cached communicator —
 plus the usual plan cold/cached construction columns.
 
+The ``fft[d=2]`` column measures the pencil-decomposition FFT workload
+(``workloads.fft``) on the same d=2 factorization: a 2-D slab transform
+of global shape ``(p, p*block_elems)`` complex64 whose single global
+transpose is a cached ``TransposePlan`` carrying ``block_elems``
+elements per peer — ``seconds`` is the full forward transform (local
+FFTs + the transpose collective), and the plan cold/cached columns
+price the whole ``pencil_fft`` resolution (comm + transpose + inner
+dense plan) exactly like the other rows.
+
 The ``autotune[d=2]`` column prices the measured-selection pipeline
 (core.autotune) against an isolated throwaway tuning DB:
 
@@ -279,6 +288,69 @@ def bench_allgather(p_procs, rows):
               f"plan_cached={cached * 1e6:.2f}us")
 
 
+def bench_fft(p_procs, rows):
+    """The pencil-FFT workload column: a 2-D slab ``pencil_fft`` on the
+    d=2 factorization, global shape ``(p, p*block_elems)`` complex64 —
+    one global transpose per direction, carrying ``block_elems``
+    elements per peer through a cached ``TransposePlan``.  ``seconds``
+    is the jitted forward transform (local FFTs + transpose); the plan
+    columns price the full ``pencil_fft`` resolution."""
+    from jax.sharding import NamedSharding
+
+    from repro.workloads import pencil_fft
+
+    dims = dims_create(p_procs, 2)
+    names = tuple(f"t{i}" for i in range(len(dims)))
+    mesh = cart_create(p_procs, tuple(reversed(dims)), names)
+    comm = torus_comm(mesh, names)
+    for nelem in ELEMENTS:
+        shape = (p_procs, p_procs * nelem)
+        fft = pencil_fft(comm, shape, backend="factorized")
+        fn = fft.forward_fn()
+        x = jax.device_put(jnp.ones(shape, jnp.complex64),
+                           NamedSharding(mesh, fft.in_spec))
+        sec = bench(fn, x)
+        cold, cached = bench_fft_plan_construction(mesh, names, shape)
+        d = fft.describe()
+        rows.append({"impl": "fft[d=2]", "dims": list(dims),
+                     "block_elems": nelem, "seconds": sec,
+                     "global_shape": list(shape),
+                     "decomposition": d["decomposition"],
+                     "predicted_transpose_seconds":
+                         d["predicted_transpose_seconds"],
+                     "plan_cold_us": cold * 1e6,
+                     "plan_cached_us": cached * 1e6,
+                     "plan": fft.plans[0].describe()})
+        print(f"alltoall_cmp,fft[d=2],{nelem},{sec * 1e6:.1f},"
+              f"decomp={d['decomposition']},"
+              f"plan_cold={cold * 1e6:.1f}us,"
+              f"plan_cached={cached * 1e6:.2f}us")
+
+
+def bench_fft_plan_construction(mesh, names, shape):
+    """FFT analogue of ``bench_plan_construction``: cold resolves the
+    comm plus every stage TransposePlan (and its inner dense plan);
+    cached re-resolves the same ``pencil_fft`` against warm registries."""
+    from repro.workloads import pencil_fft
+
+    cold = float("inf")
+    for _ in range(8):
+        free_comms()
+        free_plans()
+        free_all()
+        t0 = time.perf_counter()
+        pencil_fft(torus_comm(mesh, names), shape, backend="factorized")
+        cold = min(cold, time.perf_counter() - t0)
+    cached = float("inf")
+    for _ in range(8):
+        t0 = time.perf_counter()
+        for _ in range(PLAN_REPS):
+            pencil_fft(torus_comm(mesh, names), shape,
+                       backend="factorized")
+        cached = min(cached, (time.perf_counter() - t0) / PLAN_REPS)
+    return cold, cached
+
+
 def bench_autotune(p_procs, rows):
     """The measured-selection column: cold search vs warm-DB plan hits.
 
@@ -359,6 +431,7 @@ def main(argv=None):
                   f"plan_cached={cached * 1e6:.2f}us")
 
     bench_allgather(p_procs, rows)
+    bench_fft(p_procs, rows)
     bench_ragged(p_procs, rows)
     bench_sparse(p_procs, rows)
     bench_autotune(p_procs, rows)

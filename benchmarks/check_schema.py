@@ -7,9 +7,9 @@ devices and compares its fresh JSON against
 timings, which are machine-dependent:
 
 * the set of ``impl`` columns (direct, factorized[d=k], overlap[d=2],
-  allgather[d=2], ragged[d=2], sparse[d=2], autotune[d=2]) must match
-  exactly — a silently dropped or renamed backend column is the
-  regression this guard exists for;
+  allgather[d=2], fft[d=2], ragged[d=2], sparse[d=2], autotune[d=2])
+  must match exactly — a silently dropped or renamed backend column is
+  the regression this guard exists for;
 * per column, the row key set and the ``plan`` (describe()) key set must
   match — additions and removals both fail, so describe()/artifact
   schema changes have to land together with a regenerated golden;

@@ -6,8 +6,9 @@ bucketed exchange backends at three router densities (sparse regime,
 mid, fully dense) on the d=2 factorization.  Each PR commits its own
 ``BENCH_<n>.json``; the regression gate (``--gate``, default on when a
 baseline exists) compares the fresh record against the newest earlier
-``BENCH_*.json`` (repo root first, then the legacy
-``benchmarks/artifacts/`` location) and fails on a >25% latency
+``BENCH_*.json`` at the repo root — the single home for the full
+history (BENCH_7/BENCH_8 were migrated from the legacy
+``benchmarks/artifacts/`` location) — and fails on a >25% latency
 regression in any ``dense_us`` column — the dense factorized exchange
 is the stable reference; the ragged/sparse columns remain trajectory
 data only (their crossover moves by design as tuning evolves).
@@ -27,6 +28,12 @@ handoff: the ``KVMigrationPlan`` collective with one migrating sequence
 per prefill rank (the count matrix non-zero only in the
 prefill->decode block) against the dense exchange moving the same
 padded buffer.
+
+One extra ``fft`` row times the pencil-decomposition FFT workload
+(``workloads.fft``): the jitted 2-D slab forward transform of a
+``(p, p*bucket)`` complex64 global array — local FFTs plus one global
+transpose through a cached ``TransposePlan`` — against the same dense
+reference.
 
 Run via:
 
@@ -52,14 +59,13 @@ from repro.core import dims_create
 from repro.core.cache import cart_create
 from repro.core.comm import torus_comm
 
-PR = 9
+PR = 10
 DENSITIES = (0.05, 0.5, 1.0)
 MAX_COUNT = 256
 WARMUP, REPS = 4, 20
 REGRESSION_THRESHOLD = 0.25     # >25% slower in any dense column fails
 
 ROOT = Path(__file__).resolve().parents[1]
-ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
 
 def _best(fn, *args):
@@ -146,31 +152,51 @@ def run(p_procs: int) -> dict:
     print(f"perf_trajectory,kv_migration,n_prefill={n_prefill},"
           f"inner={kv.inner_kind},dense={dense_us:.1f}us,"
           f"kv_migrate={kv_us:.1f}us")
+
+    # the pencil-FFT workload: 2-D slab forward transform whose global
+    # transpose carries `bucket` complex64 elements per peer
+    from jax.sharding import NamedSharding
+
+    from repro.workloads import pencil_fft
+
+    fft_shape = (p_procs, p_procs * bucket)
+    fft = pencil_fft(comm, fft_shape, backend="factorized")
+    xg = jax.device_put(jnp.ones(fft_shape, jnp.complex64),
+                        NamedSharding(mesh, fft.in_spec))
+    fft_us = _best(fft.forward_fn(), xg) * 1e6
+    fft_row = {
+        "global_shape": list(fft_shape),
+        "decomposition": fft.describe()["decomposition"],
+        "transpose_backend": fft.plans[0].backend,
+        "dense_us": dense_us,
+        "fft_forward_us": fft_us,
+    }
+    print(f"perf_trajectory,fft,shape={fft_shape[0]}x{fft_shape[1]},"
+          f"decomp={fft_row['decomposition']},dense={dense_us:.1f}us,"
+          f"fft_forward={fft_us:.1f}us")
     return {"pr": PR, "p": p_procs, "dims": list(dims),
             "max_count": MAX_COUNT, "bucket": bucket, "dtype": "int32",
             "warmup": WARMUP, "repeats": REPS, "densities": rows,
-            "kv_migration": kv_row}
+            "kv_migration": kv_row, "fft": fft_row}
 
 
 def find_baseline(exclude: Path | None = None) -> Path | None:
     """Newest committed baseline: the highest-numbered ``BENCH_<n>.json``
-    at the repo root (current convention), falling back to the legacy
-    ``benchmarks/artifacts/`` location; ``exclude`` keeps a run's own
+    at the repo root — the single home for the full perf-trajectory
+    history (BENCH_7/BENCH_8 were migrated here from the legacy
+    ``benchmarks/artifacts/`` location); ``exclude`` keeps a run's own
     output file from being its baseline."""
     cands = []
-    for rank, d in enumerate((ROOT, ARTIFACTS)):
-        if not d.exists():
+    for f in ROOT.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", f.name)
+        if m is None:
             continue
-        for f in d.glob("BENCH_*.json"):
-            m = re.fullmatch(r"BENCH_(\d+)\.json", f.name)
-            if m is None:
-                continue
-            if exclude is not None and f.resolve() == exclude.resolve():
-                continue
-            cands.append((int(m.group(1)), -rank, f))
+        if exclude is not None and f.resolve() == exclude.resolve():
+            continue
+        cands.append((int(m.group(1)), f))
     if not cands:
         return None
-    return max(cands)[2]
+    return max(cands)[1]
 
 
 def check_regression(record: dict, baseline: dict,
@@ -199,6 +225,8 @@ def check_regression(record: dict, baseline: dict,
                  row.get("dense_us"), base.get("dense_us"))
     gate("kv_migration", record.get("kv_migration", {}).get("dense_us"),
          baseline.get("kv_migration", {}).get("dense_us"))
+    gate("fft", record.get("fft", {}).get("dense_us"),
+         baseline.get("fft", {}).get("dense_us"))
     return failures
 
 

@@ -9,11 +9,20 @@ Per (arch x shape x mesh) cell, from the compiled dry-run:
 plus MODEL_FLOPS = 6*N*D (train, active params for MoE) or 2*N*D
 (prefill/decode), and the useful-compute ratio MODEL_FLOPS / global
 HLO_FLOPs.  The dominant term is the bottleneck the perf loop iterates on.
+
+The FFT section is artifact-free: a strong-scaling roofline for the
+pencil-decomposition FFT (``workloads.fft``) on a fixed global problem,
+priced purely from the per-axis ``LinkModel`` alpha-beta terms
+(``tuning.predict_transpose``) — slab (one transpose over the whole
+torus, factorized vs direct) against pencil (one per-axis transpose
+stage), on all-ICI and ICI+DCN link assignments, vs the per-chip FFT
+compute term.
 """
 
 from __future__ import annotations
 
 import json
+import math
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config
@@ -111,7 +120,62 @@ def rows(mesh: str | None = "single"):
     return out
 
 
+FFT_GLOBAL = (512, 512, 512)      # fixed complex64 strong-scaling problem
+FFT_TORI = (16, 64, 256, 1024)
+
+
+def fft_rows():
+    """Strong-scaling roofline for the pencil FFT: fixed global problem,
+    growing 2-D torus, transpose terms from the per-axis LinkModels."""
+    from repro.core import DCN, ICI, dims_create, predict_transpose
+
+    n_total = math.prod(FFT_GLOBAL)
+    total_bytes = n_total * 8                       # complex64
+    flops = 5.0 * n_total * math.log2(n_total)      # ~FFT flop count
+    out = []
+    for p in FFT_TORI:
+        dims = dims_create(p, 2)
+        pencil = total_bytes / p
+        t_fft = flops / p / PEAK_FLOPS
+        for label, links in (("ici", (ICI, ICI)), ("ici+dcn", (ICI, DCN))):
+            # slab: one transpose over the whole torus per direction
+            slab_fact = predict_transpose(dims, links, pencil, p)
+            slab_dir = predict_transpose(dims, links, pencil, p,
+                                         kind="direct")
+            # pencil: one per-axis transpose stage per direction
+            pen = sum(predict_transpose((Dk,), (lk,), pencil, Dk)
+                      for Dk, lk in zip(dims, links))
+            t_comm = min(slab_fact, slab_dir, pen)
+            out.append(dict(
+                p=p, dims=dims, links=label, t_fft=t_fft,
+                slab_factorized=slab_fact, slab_direct=slab_dir,
+                pencil=pen, bound=max(t_fft, t_comm),
+                dominant="compute" if t_fft >= t_comm else "transpose"))
+    return out
+
+
+def print_fft_roofline():
+    table = fft_rows()
+    size = "x".join(str(n) for n in FFT_GLOBAL)
+    print(f"\nFFT strong scaling ({size} complex64, per-direction "
+          "transpose terms):")
+    print(f"{'p':>5s} {'dims':>10s} {'links':>8s} {'fft(s)':>10s} "
+          f"{'slab-f(s)':>10s} {'slab-d(s)':>10s} {'pencil(s)':>10s} "
+          f"{'dominant':>10s}")
+    for r in table:
+        print(f"{r['p']:5d} {str(r['dims']):>10s} {r['links']:>8s} "
+              f"{r['t_fft']:10.2e} {r['slab_factorized']:10.2e} "
+              f"{r['slab_direct']:10.2e} {r['pencil']:10.2e} "
+              f"{r['dominant']:>10s}")
+    for r in table:
+        print(f"roofline,fft[{size}]p={r['p']};links={r['links']},"
+              f"{1e6 * r['bound']:.0f},"
+              f"dom={r['dominant']};pencil_us={1e6 * r['pencil']:.1f};"
+              f"slab_us={1e6 * r['slab_factorized']:.1f}")
+
+
 def main():
+    print_fft_roofline()
     table = rows("single")
     if not table:
         print("roofline,skipped,no dryrun artifacts")

@@ -27,6 +27,7 @@ from .plan import (
     KVMigrationPlan,
     RaggedA2APlan,
     SparseA2APlan,
+    TransposePlan,
     free_plans,
     plan_all_to_all,
     plan_cache_entries,
@@ -34,6 +35,7 @@ from .plan import (
     plan_kv_migration,
     plan_ragged_all_to_all,
     plan_sparse_all_to_all,
+    plan_transpose,
     set_plan_cache_capacity,
 )
 from .comm import (
@@ -80,8 +82,10 @@ from .faults import (
 from .simulator import (
     PAPER_EXAMPLES,
     SparseVolumeCount,
+    check_correct_pencil_transpose,
     check_correct_sparse_alltoallv,
     example_index_table,
+    pencil_transpose_reference,
     round_datatype,
     simulate_direct_alltoall,
     simulate_direct_alltoallv,
@@ -90,6 +94,7 @@ from .simulator import (
     simulate_factorized_alltoallv,
     simulate_factorized_reduce_scatter,
     simulate_kv_migration,
+    simulate_pencil_transpose,
     simulate_sparse_alltoallv,
 )
 from .tuning import (
@@ -110,6 +115,7 @@ from .tuning import (
     predict_ragged,
     predict_reduce_scatter,
     predict_sparse,
+    predict_transpose,
 )
 from .guidelines import Measurement, Violation, check_guidelines, format_report
 from .hlo_inspect import collective_bytes_of, interleave_report, parse_hlo
@@ -126,7 +132,8 @@ __all__ = [
     "LinkModel", "Measurement",
     "PAPER_EXAMPLES", "RaggedA2APlan", "ReduceScatterPlan", "Schedule",
     "ServingSplit", "SparseA2APlan", "SparseVolumeCount", "TorusComm",
-    "TorusFactorization", "TuningDB", "check_correct_sparse_alltoallv",
+    "TorusFactorization", "TransposePlan", "TuningDB",
+    "check_correct_pencil_transpose", "check_correct_sparse_alltoallv",
     "DeviceLossError", "FaultError", "FaultInjector", "FaultSpec",
     "Violation", "autotune", "autotune_ragged", "autotune_stats",
     "bucket_occupancy",
@@ -145,11 +152,13 @@ __all__ = [
     "overlapped_all_to_all_tiled", "parse_hlo", "pipeline_order",
     "pipelined_all_to_all", "plan_all_to_all", "plan_cache_entries",
     "plan_cache_stats", "plan_db_key", "plan_kv_migration",
+    "pencil_transpose_reference",
     "plan_ragged_all_to_all",
-    "plan_sparse_all_to_all",
+    "plan_sparse_all_to_all", "plan_transpose",
     "predict_allgather", "predict_kv_migration", "predict_overlapped",
     "predict_ragged",
-    "predict_reduce_scatter", "predict_sparse", "prime_factorization",
+    "predict_reduce_scatter", "predict_sparse", "predict_transpose",
+    "prime_factorization",
     "ragged_db_key",
     "reset_autotune_stats", "round_datatype", "round_message_masks",
     "run_pipelined",
@@ -157,7 +166,7 @@ __all__ = [
     "simulate_direct_alltoall", "simulate_direct_alltoallv",
     "simulate_factorized_allgather", "simulate_factorized_alltoall",
     "simulate_factorized_alltoallv", "simulate_factorized_reduce_scatter",
-    "simulate_kv_migration",
+    "simulate_kv_migration", "simulate_pencil_transpose",
     "simulate_sparse_alltoallv", "sparse_exact_alltoallv",
     "sparse_traffic_stats",
     "torus_comm", "torus_rank", "unified_stats",

@@ -661,6 +661,29 @@ class TorusComm:
             reverse_round_order=reverse_round_order, links=links,
             db=self._db if db is None else db))
 
+    def transpose(self, local_shape, dtype="float32", *,
+                  split_axis: int, concat_axis: int, backend: str = "tuned",
+                  round_order=None, reverse_round_order=None,
+                  n_chunks: int = 0, max_chunks: int = 8, links=None,
+                  db=None):
+        """Build (or fetch) a :class:`~repro.core.plan.TransposePlan` —
+        the pencil↔pencil re-shard of a distributed FFT
+        (``workloads.fft``) as a tiled all-to-all over this comm's torus:
+        the local ``local_shape`` pencil is split into ``p`` chunks along
+        ``split_axis`` and received chunks concatenate source-major along
+        ``concat_axis``.  Resolves through any dense backend (including
+        ``autotune`` against this comm's tuning DB); the plan's inner
+        dense A2APlan is shared with the inverse transpose (swapped
+        axes), so a forward/inverse pair costs one resolution."""
+        return self._note(_planmod._build_transpose_plan(
+            self._source, self.axis_names, local_shape, dtype,
+            split_axis=split_axis, concat_axis=concat_axis, backend=backend,
+            variant=self.variant, round_order=round_order,
+            reverse_round_order=reverse_round_order, n_chunks=n_chunks,
+            max_chunks=max_chunks, links=links,
+            db=self._db if db is None else db,
+            parent=self._parent_axes()))
+
     def all_gather(self, block_shape=None, dtype=None, *,
                    backend: str = "tuned", round_order=None,
                    n_chunks: int = 1, links=None) -> AllGatherPlan:

@@ -395,7 +395,7 @@ def _sub_plans(plan) -> tuple:
         return (plan.data, plan.counts_plan)
     if isinstance(plan, SparseA2APlan):
         return (plan.counts_plan,)
-    if isinstance(plan, KVMigrationPlan):
+    if isinstance(plan, (KVMigrationPlan, TransposePlan)):
         return (plan.inner,)
     return ()
 
@@ -673,6 +673,355 @@ def _build_dense_plan(mesh_or_axis_dims, axis_names, block_shape=None,
                    else tuple(block_shape), dtype=dtype, links=link_models,
                    schedule=sched, mesh=mesh, tuned_from=tuned_from,
                    measured=measured)
+    return _registry_store(key, plan)
+
+
+# ---------------------------------------------------------------------------
+# Pencil-transpose plans (distributed-FFT re-shard)
+# ---------------------------------------------------------------------------
+
+
+class TransposePlan:
+    """A resolved, reusable pencil↔pencil transpose plan.
+
+    Construct via :meth:`TorusComm.transpose` (or :func:`plan_transpose`);
+    never directly.  The global transpose of a pencil-decomposed FFT
+    (``workloads.fft``) is an all-to-all of *uniform contiguous* chunks:
+    the local pencil ``in_shape`` is split into ``p`` chunks along
+    ``split_axis`` (chunk ``t`` -> torus rank ``t``) and the received
+    chunks are concatenated source-major along ``concat_axis`` — the
+    tiled collective semantics.  The plan composes the block-shape
+    metadata for that re-shard with an inner dense :class:`A2APlan` over
+    the same torus whose per-peer block is one chunk, so the transpose
+    resolves through any dense backend — ``direct`` / ``factorized`` /
+    ``pipelined`` / ``overlap`` / ``tuned`` / ``autotune`` — and shares
+    the registry, cost model, tuning DB, and telemetry machinery.
+
+    Correctness oracle: ``core.simulator.simulate_pencil_transpose``.
+    """
+
+    kind = "transpose"
+
+    def __init__(self, inner: A2APlan, *, in_shape: tuple[int, ...],
+                 split_axis: int, concat_axis: int, parent=None):
+        self.inner = inner
+        self.in_shape = tuple(in_shape)
+        self.split_axis = int(split_axis)
+        self.concat_axis = int(concat_axis)
+        out = list(self.in_shape)
+        out[self.split_axis] //= inner.p
+        out[self.concat_axis] *= inner.p
+        self.out_shape = tuple(out)
+        self.parent = parent
+        self._from_cache = False
+        self._fetches = 1
+        self._host_fns: dict[Mesh, object] = {}
+        self._step_fns: dict[Mesh, tuple] = {}
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def fact(self):
+        return self.inner.fact
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self.inner.axis_names
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.inner.dims
+
+    @property
+    def p(self) -> int:
+        return self.inner.p
+
+    @property
+    def d(self) -> int:
+        return self.inner.d
+
+    @property
+    def variant(self) -> str:
+        return self.inner.variant
+
+    @property
+    def backend(self) -> str:
+        return self.inner.backend
+
+    @property
+    def dtype(self):
+        return self.inner.dtype
+
+    @property
+    def block_shape(self) -> tuple[int, ...]:
+        """One per-peer chunk: ``in_shape`` with ``split_axis`` divided by
+        ``p`` — the inner dense plan's block."""
+        return self.inner.block_shape
+
+    @property
+    def block_bytes(self) -> int | None:
+        return self.inner.block_bytes
+
+    @property
+    def pencil_bytes(self) -> int | None:
+        bb = self.inner.block_bytes
+        return None if bb is None else bb * self.p
+
+    # -- execution surface (inside shard_map) ------------------------------
+
+    def apply(self, x):
+        """The forward re-shard: ``x`` is this device's ``in_shape``
+        pencil; returns its ``out_shape`` pencil (``split_axis`` sharded,
+        ``concat_axis`` gathered).  Runs inside ``jax.shard_map`` over
+        the torus axes."""
+        if x.shape != self.in_shape:
+            raise ValueError(f"pencil shape {x.shape} != plan in_shape "
+                             f"{self.in_shape}")
+        return self.inner.tiled(x, self.split_axis, self.concat_axis)
+
+    def inverse_apply(self, y):
+        """The exact inverse re-shard (the tiled collective with split and
+        concat swapped, rounds in the drain order): bit-identical
+        round-trip with :meth:`apply` for any backend."""
+        if y.shape != self.out_shape:
+            raise ValueError(f"pencil shape {y.shape} != plan out_shape "
+                             f"{self.out_shape}")
+        return self.inner.tiled(y, self.concat_axis, self.split_axis,
+                                reverse=True)
+
+    # -- host-level convenience -------------------------------------------
+
+    def specs(self) -> tuple[P, P]:
+        """Default global PartitionSpecs for :meth:`host_fn`: the
+        distributed pencil axis (``concat_axis`` in, ``split_axis`` out)
+        sharded over the plan's torus axes, everything else replicated.
+        Only complete when the plan spans *all* mesh axes (the slab /
+        full-torus transpose); sub-group transposes must pass specs that
+        also shard the other pencil axes."""
+        nd = len(self.in_shape)
+        axes = tuple(reversed(self.axis_names))
+        in_spec = [None] * nd
+        in_spec[self.concat_axis] = axes
+        out_spec = [None] * nd
+        out_spec[self.split_axis] = axes
+        return P(*in_spec), P(*out_spec)
+
+    def host_fn(self, mesh: Mesh | None = None, *, in_spec: P | None = None,
+                out_spec: P | None = None):
+        """Jitted transpose over the *stage-global* array (the full
+        logical array at this FFT stage, sharded per ``in_spec``);
+        returns it re-sharded per ``out_spec``.  Defaults to
+        :meth:`specs`.  Like ``A2APlan.host_fn`` the callable is
+        tracer-aware: tracing off dispatches one fused jit; tracing on
+        runs the stepped per-round path (factorized backend) so every
+        dimension-wise round gets a measured span and a drift
+        observation."""
+        mesh = self.inner._mesh if mesh is None else mesh
+        if mesh is None:
+            raise ValueError("plan was built without a Mesh; pass one")
+        d_in, d_out = self.specs()
+        in_spec = d_in if in_spec is None else in_spec
+        out_spec = d_out if out_spec is None else out_spec
+        fkey = (mesh, in_spec, out_spec)
+        if fkey not in self._host_fns:
+            import jax
+            self._host_fns[fkey] = jax.jit(jax.shard_map(
+                self.apply, mesh=mesh, in_specs=in_spec,
+                out_specs=out_spec))
+        fast = self._host_fns[fkey]
+        tr = telemetry.get_tracer()
+
+        def run(x):
+            if not tr.enabled:
+                return fast(x)
+            return self._traced_execute(tr, mesh, fast, x, in_spec,
+                                        out_spec)
+
+        return run
+
+    # -- telemetry-traced execution ----------------------------------------
+
+    def _drift_key(self) -> str:
+        dims = "x".join(str(s) for s in self.dims)
+        shape = "x".join(str(s) for s in self.in_shape)
+        return (f"transpose[{','.join(self.axis_names)}]{dims}"
+                f":{self.backend}:{shape}:{self.split_axis}"
+                f"->{self.concat_axis}")
+
+    def _stepped_fns(self, mesh, in_spec, out_spec):
+        """Pre/post jitted re-layout fns bracketing the inner plan's
+        per-round host fns: pencil -> harness block form ``(p, p,
+        *block)`` -> rounds -> pencil.  Valid when the plan spans all
+        mesh axes (the default-spec harness form)."""
+        fkey = (mesh, in_spec, out_spec)
+        if fkey not in self._step_fns:
+            import jax
+            import jax.numpy as _jnp
+            p, s, c = self.p, self.split_axis, self.concat_axis
+            block_spec = P(tuple(reversed(self.axis_names)))
+
+            def pre(xl):
+                sh = xl.shape
+                xb = xl.reshape(sh[:s] + (p, sh[s] // p) + sh[s + 1:])
+                return _jnp.moveaxis(xb, s, 0)[None]
+
+            def post(yl):
+                y = _jnp.moveaxis(yl[0], 0, c)
+                sh = y.shape
+                return y.reshape(sh[:c] + (sh[c] * sh[c + 1],)
+                                 + sh[c + 2:])
+
+            self._step_fns[fkey] = (
+                jax.jit(jax.shard_map(pre, mesh=mesh, in_specs=in_spec,
+                                      out_specs=block_spec)),
+                jax.jit(jax.shard_map(post, mesh=mesh,
+                                      in_specs=block_spec,
+                                      out_specs=out_spec)))
+        return self._step_fns[fkey]
+
+    def _traced_execute(self, tr, mesh, fast, x, in_spec, out_spec):
+        import jax
+        det = telemetry.drift_detector()
+        key = self._drift_key()
+        preds = self.inner._per_axis_predictions()
+        sched = self.inner.schedule
+        predicted = sched.predicted_seconds if sched is not None \
+            else (sum(preds.values()) if preds else None)
+        telemetry.metrics().counter("plan.traced_executions").inc()
+        stepped = (self.backend == "factorized"
+                   and set(self.axis_names) == set(mesh.axis_names))
+        with tr.span("plan.execute", cat="plan", kind="transpose",
+                     backend=self.backend,
+                     axes=",".join(self.axis_names),
+                     dims="x".join(str(n) for n in self.dims),
+                     pencil="x".join(str(n) for n in self.in_shape),
+                     predicted_seconds=predicted,
+                     tuned_from=self.inner.tuned_from,
+                     drift_key=key) as ex:
+            t0 = time.perf_counter()
+            if stepped:
+                pre, post = self._stepped_fns(mesh, in_spec, out_spec)
+                y = jax.block_until_ready(pre(x))
+                for k, name, Dk, fn in self.inner._round_host_fns(mesh):
+                    pred_k = None if preds is None else preds.get(name)
+                    with tr.span("plan.round", cat="plan", axis=name,
+                                 round=k, dim=Dk,
+                                 predicted_seconds=pred_k):
+                        tr0 = time.perf_counter()
+                        y = jax.block_until_ready(fn(y))
+                        if pred_k:
+                            det.observe(f"{key}:axis={name}", pred_k,
+                                        time.perf_counter() - tr0)
+                y = jax.block_until_ready(post(y))
+            else:
+                with tr.span("plan.round", cat="plan", axis="*",
+                             backend=self.backend, timing="fused",
+                             predicted_seconds=predicted):
+                    y = jax.block_until_ready(fast(x))
+            measured = time.perf_counter() - t0
+            ratio = det.observe(key, predicted, measured) \
+                if predicted else None
+            ex.set(measured_seconds=measured, drift_ratio=ratio)
+        return y
+
+    # -- introspection -----------------------------------------------------
+
+    def describe(self) -> dict:
+        """Stable, JSON-serializable summary of the resolved plan."""
+        inner = self.inner.describe()
+        return {
+            "kind": "transpose",
+            "axis_names": list(self.axis_names),
+            "dims": list(self.dims),
+            "p": self.p,
+            "d": self.d,
+            "backend": self.backend,
+            "requested_backend": self.inner.requested_backend,
+            "variant": self.variant,
+            "in_shape": list(self.in_shape),
+            "out_shape": list(self.out_shape),
+            "split_axis": self.split_axis,
+            "concat_axis": self.concat_axis,
+            "block_shape": None if self.block_shape is None
+            else list(self.block_shape),
+            "dtype": inner["dtype"],
+            "pencil_bytes": self.pencil_bytes,
+            "block_bytes": self.block_bytes,
+            "predicted_seconds": inner["predicted_seconds"],
+            "tuned_from": self.inner.tuned_from,
+            "parent": None if self.parent is None else list(self.parent),
+            "drift_ratio": telemetry.drift_detector()
+            .drift_ratio(self._drift_key()),
+            "cache": "hit" if self._from_cache else "miss",
+        }
+
+    def __repr__(self):
+        return (f"TransposePlan(dims={self.dims}, axes={self.axis_names}, "
+                f"in_shape={self.in_shape}, split={self.split_axis}, "
+                f"concat={self.concat_axis}, backend={self.backend!r})")
+
+
+def plan_transpose(mesh_or_axis_dims, axis_names, local_shape, dtype, *,
+                   split_axis: int, concat_axis: int,
+                   backend: str = "tuned", variant: str = "natural",
+                   round_order=None, reverse_round_order=None,
+                   n_chunks: int = 0, max_chunks: int = 8, links=None,
+                   db=None) -> TransposePlan:
+    """Build (or fetch) a :class:`TransposePlan` — thin delegator to
+    ``torus_comm(...).transpose(...)``, mirroring :func:`plan_all_to_all`."""
+    from .comm import torus_comm
+    return torus_comm(mesh_or_axis_dims, axis_names,
+                      variant=variant).transpose(
+        local_shape, dtype, split_axis=split_axis, concat_axis=concat_axis,
+        backend=backend, round_order=round_order,
+        reverse_round_order=reverse_round_order, n_chunks=n_chunks,
+        max_chunks=max_chunks, links=links, db=db)
+
+
+def _build_transpose_plan(mesh_or_axis_dims, axis_names, local_shape, dtype,
+                          *, split_axis: int, concat_axis: int,
+                          backend: str = "tuned", variant: str = "natural",
+                          round_order=None, reverse_round_order=None,
+                          n_chunks: int = 0, max_chunks: int = 8,
+                          links=None, db=None,
+                          parent=None) -> TransposePlan:
+    """Resolution + registry for pencil-transpose plans: validate the
+    re-shard geometry, resolve the inner dense plan over the per-peer
+    chunk (any backend, including the tuning DB), and key the composite
+    off the inner's registry key so autotune DB-generation invalidation
+    propagates for free."""
+    local_shape = tuple(int(n) for n in local_shape)
+    nd = len(local_shape)
+    if not 0 <= split_axis < nd or not 0 <= concat_axis < nd:
+        raise ValueError(f"split/concat axes ({split_axis}, {concat_axis}) "
+                         f"outside pencil rank {nd}")
+    if split_axis == concat_axis:
+        raise ValueError("split_axis and concat_axis must differ")
+    axis_names = _as_tuple(axis_names)
+    if isinstance(mesh_or_axis_dims, Mesh):
+        dims = get_factorization(mesh_or_axis_dims, axis_names,
+                                 variant=variant).dims
+    else:
+        dims = tuple(int(s) for s in mesh_or_axis_dims)
+    p = math.prod(dims)
+    if local_shape[split_axis] % p:
+        raise ValueError(f"split axis size {local_shape[split_axis]} not "
+                         f"divisible by p={p} (dims {dims})")
+    block_shape = list(local_shape)
+    block_shape[split_axis] //= p
+    inner = _build_dense_plan(
+        mesh_or_axis_dims, axis_names, tuple(block_shape), dtype,
+        backend=backend, variant=variant, round_order=round_order,
+        reverse_round_order=reverse_round_order, n_chunks=n_chunks,
+        max_chunks=max_chunks, links=links, db=db)
+    key = ("transpose", inner._registry_key, local_shape, int(split_axis),
+           int(concat_axis), parent)
+    cached = _registry_fetch(key)
+    if cached is not None:
+        return cached
+    plan = TransposePlan(inner, in_shape=local_shape,
+                         split_axis=split_axis, concat_axis=concat_axis,
+                         parent=parent)
     return _registry_store(key, plan)
 
 

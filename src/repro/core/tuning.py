@@ -561,6 +561,47 @@ def choose_algorithm(axis_dims: tuple[int, ...],
     return best
 
 
+def predict_transpose(dims, links, pencil_bytes: float, p: int,
+                      kind: str = "factorized") -> float:
+    """Alpha-beta prediction for one pencil-decomposition FFT transpose.
+
+    A transpose moves the rank's whole local pencil (``pencil_bytes``)
+    re-sharded as ``p`` *uniform* contiguous chunks of ``pencil_bytes/p``
+    each — the opposite traffic shape from MoE's many small ragged rows.
+    The per-peer block is therefore large, which shifts the alpha-beta
+    tradeoff: the factorized algorithm's per-round volume is
+    ``(D[k]-1)/D[k] * pencil_bytes`` so its *total* volume exceeds the
+    direct algorithm's ``(p-1)/p * pencil_bytes`` — message combining
+    only pays when the ``(p-1)`` per-message alphas dominate, i.e. for
+    small pencils or very latency-heavy links (DCN axes).
+    """
+    links = per_axis_links(links, len(dims))
+    block = pencil_bytes / p
+    if kind == "direct":
+        return predict_direct(p, block, slowest_active_link(dims, links))
+    if kind == "factorized":
+        return predict_factorized(dims, links, block, p)
+    raise ValueError(f"unknown transpose kind {kind!r}")
+
+
+def choose_transpose_algorithm(axis_dims, axis_links, pencil_bytes: float,
+                               *, max_chunks: int = 1) -> Schedule:
+    """Pencil-aware :func:`choose_algorithm`: pick the backend for a
+    pencil transpose from its *whole-pencil* byte count.
+
+    Identical candidate set and cost model as :func:`choose_algorithm`
+    with the per-peer block ``pencil_bytes / p`` — kept as its own entry
+    point because the transpose regime sits on the other side of the
+    crossover from MoE traffic (few large contiguous blocks, so
+    ``direct`` wins once the pencil outgrows
+    ``p * crossover_block_bytes``), and because the FFT roofline
+    (``benchmarks.roofline``) prices strong scaling through it.
+    """
+    p = math.prod(axis_dims)
+    return choose_algorithm(axis_dims, axis_links, pencil_bytes / p,
+                            max_chunks=max_chunks)
+
+
 def crossover_block_bytes(axis_dims, axis_links, lo=1, hi=1 << 30) -> int:
     """Smallest block size for which direct beats the best factorized —
     the paper's empirical ~100-element crossover, derived from the model."""

@@ -304,6 +304,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
              "inner_kind": d["inner_kind"], "backend": d["backend"],
              "tuned_from": d["tuned_from"]}
             for d in new_plans if d.get("kind") == "kv_migrate"],
+        # Pencil-transpose plans (workloads.fft / spectral long-conv):
+        # the re-shard geometry each stage resolved plus the inner dense
+        # backend and the alpha-beta prediction — one entry per FFT
+        # transpose stage the cell's data path built.
+        "a2a_transpose": [
+            {"axis_names": d["axis_names"], "dims": d["dims"],
+             "in_shape": d["in_shape"], "out_shape": d["out_shape"],
+             "split_axis": d["split_axis"], "concat_axis": d["concat_axis"],
+             "backend": d["backend"], "pencil_bytes": d["pencil_bytes"],
+             "predicted_seconds": d["predicted_seconds"],
+             "tuned_from": d["tuned_from"]}
+            for d in new_plans if d.get("kind") == "transpose"],
         "a2a_plan_cache": plan_cache_stats(),
         # Tuning-DB traffic for the cell (delta over the cell, like the
         # a2a_plans snapshot above): under a2a_backend="autotune"

@@ -43,13 +43,21 @@ class ModelConfig:
     rope_theta: float = 10000.0
     attention_impl: str = "xla"       # xla | pallas | pallas_interpret
 
-    # --- layer mixer pattern (repeating): attn | mamba | mlstm | slstm ---
+    # --- layer mixer pattern (repeating):
+    #     attn | mamba | mlstm | slstm | spectral ---
     block_pattern: tuple[str, ...] = ("attn",)
 
     # --- ssm (mamba) ---
     ssm_state: int = 16
     ssm_conv: int = 4
     ssm_expand: int = 2
+    # Substitute every recurrent mixer (mamba/mlstm/slstm) in
+    # block_pattern with the spectral long-convolution layer
+    # (models.spectral): same diagonal state-space family, but the
+    # full-sequence pass is an FFT causal conv (O(S log S), and
+    # sequence-parallel via workloads.fft.PencilFFT) instead of a
+    # sequential scan; decode keeps the O(1)-per-token recurrence.
+    spectral_long_conv: bool = False
 
     # --- xlstm: chunkwise-parallel mLSTM chunk length; 0 = per-step
     # recurrence (paper-faithful baseline).  L>0 cuts matrix-memory HBM
@@ -139,6 +147,9 @@ class ModelConfig:
         plan = []
         for i in range(period):
             mixer = self.block_pattern[i % len(self.block_pattern)]
+            if self.spectral_long_conv and mixer in ("mamba", "mlstm",
+                                                     "slstm"):
+                mixer = "spectral"
             if self.d_ff == 0:
                 ffn = "none"
             elif self.n_experts and (self.moe_every <= 1
@@ -172,6 +183,7 @@ class ModelConfig:
             Ein * (self.ssm_state * 2 + 1) + Ein * D + Ein * self.ssm_state
         mlstm_p = D * (2 * D) * 2 + (2 * D) * 3 * (2 * D) // 4 + 2 * D * D
         slstm_p = D * D * 4 + D * 4 * D // 4
+        spectral_p = D * 2 * Ein + Ein * (3 * self.ssm_state + 2) + Ein * D
         ffn_dense = 3 * D * F if self.act == "swiglu" else 2 * D * F
         per_expert = 3 * D * F if self.act == "swiglu" else 2 * D * F
         for i in range(self.n_layers):
@@ -184,6 +196,8 @@ class ModelConfig:
                 n_mixer_other += mlstm_p
             elif mixer == "slstm":
                 n_mixer_other += slstm_p
+            elif mixer == "spectral":
+                n_mixer_other += spectral_p
             if ffn == "dense":
                 n_ffn_dense += 1
             elif ffn == "moe":

@@ -1,0 +1,158 @@
+"""Spectral long-convolution mixer — an LTI diagonal SSM whose full
+sequence pass is an FFT causal convolution.
+
+The state-space kernel is time-invariant (unlike mamba's selective
+scan), so the length-S output is a causal convolution with the
+materialized kernel ``K[t, e] = sum_n C[e,n] * Abar[e,n]^t * Bbar[e,n]``
+— computed in O(S log S) via FFT instead of an O(S) sequential scan.
+Decode keeps the recurrent form: one O(Ein*n) state update per token,
+bit-for-bit the same linear system (the SSM-parity test in
+``tests/test_models.py`` checks conv ≡ recurrence).
+
+Sequence-parallel training rides the pencil FFT
+(:func:`distributed_fft_causal_conv`): the rfft/irfft pair along a
+*sharded* sequence axis runs through ``workloads.fft.PencilFFT``, so
+every global re-shard is a cached
+:class:`~repro.core.plan.TransposePlan`.
+
+Opt-in via ``ModelConfig(spectral_long_conv=True)`` (substitutes the
+recurrent mixers in ``block_pattern``) or ``block_pattern=("spectral",)``
+directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, silu
+from .config import ModelConfig
+
+
+def spectral_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    Ein = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    return {
+        "in_proj": ParamSpec((D, 2 * Ein), ("embed_fsdp", "mlp")),
+        "A_log": ParamSpec((Ein, n), ("mlp", None), init="ones"),
+        "B": ParamSpec((Ein, n), ("mlp", None)),
+        "C": ParamSpec((Ein, n), ("mlp", None)),
+        "dt_log": ParamSpec((Ein,), ("mlp",), init="zeros"),
+        "D_skip": ParamSpec((Ein,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((Ein, D), ("mlp", "embed_fsdp")),
+    }
+
+
+def _discretize(p):
+    """(Abar, Bbar, C) of the ZOH-Euler discretized diagonal system."""
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (Ein, n) < 0
+    dt = jax.nn.softplus(p["dt_log"].astype(jnp.float32))[:, None]
+    dA = jnp.exp(dt * A)                                   # (Ein, n)
+    dB = dt * p["B"].astype(jnp.float32)                   # (Ein, n)
+    return dA, dB, p["C"].astype(jnp.float32), dt * A
+
+
+def ssm_kernel(p, L: int):
+    """Materialize the causal conv kernel ``K``: (L, Ein), with
+    ``K[t] = C . Abar^t . Bbar`` (so ``K[0] = C . Bbar``)."""
+    _, dB, C, dtA = _discretize(p)
+    t = jnp.arange(L, dtype=jnp.float32)
+    powers = jnp.exp(t[:, None, None] * dtA[None])         # (L, Ein, n)
+    return jnp.einsum("len,en->le", powers, C * dB)
+
+
+def fft_causal_conv(x, kernel):
+    """Causal (linear, not circular) convolution of ``x``: (B, S, E)
+    with per-channel ``kernel``: (S, E) via zero-padded FFT; float32."""
+    S = x.shape[1]
+    L = 2 * S
+    X = jnp.fft.rfft(x.astype(jnp.float32), n=L, axis=1)
+    Kf = jnp.fft.rfft(kernel.astype(jnp.float32), n=L, axis=0)
+    return jnp.fft.irfft(X * Kf[None], n=L, axis=1)[:, :S]
+
+
+def distributed_fft_causal_conv(comm, x, kernel, *, mesh=None):
+    """Sequence-sharded causal convolution through the pencil FFT.
+
+    ``x``: global (B, S, E) with the sequence axis sharded over
+    ``comm``'s torus (any input sharding — the jit re-shards);
+    ``kernel``: (S, E), replicated.  The forward and inverse transforms
+    along the padded sequence axis run through
+    :class:`~repro.workloads.fft.PencilFFT` (slab decomposition over
+    *all* torus axes), so each of the four global re-shards is a cached
+    :class:`~repro.core.plan.TransposePlan` collective and the whole
+    conv is one jit — zero host round-trips.  Returns (B, S, E) float32
+    sharded like the FFT input spec."""
+    from repro.workloads.fft import PencilFFT
+    from jax.sharding import PartitionSpec as P
+
+    B, S, E = x.shape
+    L = 2 * S
+    p = comm.p
+    if L % p or (B * E) % p:
+        raise ValueError(f"padded seq {L} and B*E {B * E} must divide "
+                         f"p={p}")
+    fft = PencilFFT(comm, (L, B * E), axes=(0,),
+                    grid=(tuple(comm.axis_names),), dtype="complex64")
+    mesh = comm.mesh if mesh is None else mesh
+    dim_of = dict(zip(comm.axis_names, comm.dims))
+    gspec = tuple(reversed(comm.axis_names))               # major -> minor
+    cols = B * E // p
+
+    def shard_local(xl, kp):
+        # xl: (L/p, B*E) time-major slab; kp: (L, E) replicated
+        X = fft.forward_local(xl)                          # (L, B*E/p)
+        idx = jnp.zeros((), jnp.int32)
+        for name in gspec:
+            idx = idx * dim_of[name] + jax.lax.axis_index(name)
+        off = idx * cols
+        e_idx = (off + jnp.arange(cols)) % E               # channel of col
+        Kf = jnp.fft.fft(kp, axis=0)                       # (L, E) local
+        return fft.inverse_local(X * Kf[:, e_idx])         # (L/p, B*E)
+
+    def run(xg, kg):
+        xp = jnp.pad(xg.astype(jnp.complex64), ((0, 0), (0, S), (0, 0)))
+        xf = jnp.moveaxis(xp, 1, 0).reshape(L, B * E)
+        kp = jnp.pad(kg.astype(jnp.complex64), ((0, S), (0, 0)))
+        yf = jax.shard_map(shard_local, mesh=mesh,
+                           in_specs=(fft.in_spec, P(None, None)),
+                           out_specs=fft.in_spec)(xf, kp)
+        y = jnp.moveaxis(yf.reshape(L, B, E), 0, 1)[:, :S]
+        return jnp.real(y)
+
+    return jax.jit(run)(x, kernel)
+
+
+def spectral_block(p, x, cfg: ModelConfig, state=None):
+    """x: (B, S, D).  ``state=None`` (train / prefill from scratch) runs
+    the FFT convolution path and returns the final recurrent state for
+    decode handoff; with a state dict (``{'ssm': (B, Ein, n)}``) it runs
+    the step recurrence — same linear system either way.  Returns
+    (y, new_state)."""
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    xz = x.astype(cd) @ p["in_proj"].astype(cd)            # (B, S, 2Ein)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs_f = xs.astype(jnp.float32)
+    dA, dB, C, dtA = _discretize(p)
+
+    if state is None:
+        K = ssm_kernel(p, S)
+        y = fft_causal_conv(xs_f, K)                       # (B, S, Ein)
+        # decode handoff: h[S-1] = sum_s Abar^{S-1-s} Bbar x[s]
+        rev = jnp.arange(S - 1, -1, -1, dtype=jnp.float32)
+        powers = jnp.exp(rev[:, None, None] * dtA[None])   # (S, Ein, n)
+        h_final = jnp.einsum("sen,bse->ben", powers * dB[None], xs_f)
+    else:
+        def step(h, x_t):                                  # x_t: (B, Ein)
+            h = dA[None] * h + dB[None] * x_t[..., None]
+            return h, jnp.einsum("ben,en->be", h, C)
+        h_final, ys = jax.lax.scan(step, state["ssm"],
+                                   jnp.moveaxis(xs_f, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1)                         # (B, S, Ein)
+
+    y = y + xs_f * p["D_skip"].astype(jnp.float32)
+    y = y.astype(cd) * silu(z)
+    out = y @ p["out_proj"].astype(cd)
+    return out, {"ssm": h_final}

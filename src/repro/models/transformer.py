@@ -26,6 +26,7 @@ from repro.models import attention as attn
 from repro.models import ffn as ffn_mod
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
+from repro.models import spectral as spectral_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.common import (ParamSpec, init_params, rms_norm,
                                  layer_norm, softmax_cross_entropy,
@@ -66,7 +67,8 @@ def _apply_norm(p, x, cfg):
 def _mixer_specs(cfg, kind):
     return {"attn": attn.attn_specs, "mamba": mamba_mod.mamba_specs,
             "mlstm": xlstm_mod.mlstm_specs,
-            "slstm": xlstm_mod.slstm_specs}[kind](cfg)
+            "slstm": xlstm_mod.slstm_specs,
+            "spectral": spectral_mod.spectral_specs}[kind](cfg)
 
 
 def _ffn_specs(cfg, kind):
@@ -108,6 +110,9 @@ def _position_state(cfg: ModelConfig, mixer, batch, max_seq):
         return {"ssm": jnp.zeros((batch, Ein, cfg.ssm_state), jnp.float32),
                 "conv": jnp.zeros((batch, cfg.ssm_conv - 1, Ein),
                                   cfg.cdtype)}
+    if mixer == "spectral":
+        Ein = cfg.ssm_expand * D
+        return {"ssm": jnp.zeros((batch, Ein, cfg.ssm_state), jnp.float32)}
     if mixer == "mlstm":
         Din = 2 * D
         H = cfg.n_heads
@@ -140,6 +145,8 @@ def _position_state_logical(cfg: ModelConfig, mixer):
     if mixer == "mamba":
         return {"ssm": ("batch", "mlp", None),
                 "conv": ("batch", None, "mlp")}
+    if mixer == "spectral":
+        return {"ssm": ("batch", "mlp", None)}
     if mixer == "mlstm":
         return {"C": ("batch", "heads", None, None),
                 "n": ("batch", "heads", None), "m": ("batch", "heads")}
@@ -179,6 +186,9 @@ def _apply_position(pp, x, cfg, mixer, ffn, mesh, rules, positions,
     elif mixer == "mamba":
         y, new_state = mamba_mod.mamba_block(pp["mixer"], h, cfg,
                                              state=state)
+    elif mixer == "spectral":
+        y, new_state = spectral_mod.spectral_block(pp["mixer"], h, cfg,
+                                                   state=state)
     elif mixer == "mlstm":
         y, new_state = xlstm_mod.mlstm_block(pp["mixer"], h, cfg,
                                              state=state)

@@ -1,0 +1,11 @@
+"""Distributed workloads built on the torus collectives.
+
+The first resident is the pencil-decomposition FFT (``workloads.fft``):
+every global transpose of the multidimensional FFT is a cached
+:class:`~repro.core.plan.TransposePlan` — the paper's factorized
+zero-copy all-to-all carrying one contiguous pencil chunk per peer.
+"""
+
+from .fft import PencilFFT, pencil_fft
+
+__all__ = ["PencilFFT", "pencil_fft"]

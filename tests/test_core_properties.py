@@ -49,6 +49,40 @@ class TestSimulatorProperties:
         assert check_correct((2, 3, 4), tuple(order))
 
 
+class TestPencilTransposeProperties:
+    """The FFT re-shard oracle under random factorizations and pencil
+    geometries: exact re-shard, round-trip identity, Theorem 1 volume
+    (all three asserted by check_correct_pencil_transpose)."""
+
+    @given(st.lists(st.integers(2, 4), min_size=1, max_size=3),
+           st.integers(1, 3), st.integers(0, 1), st.data())
+    @settings(max_examples=30, deadline=None)
+    def test_random_geometries(self, dims, mult, split, data):
+        from repro.core.simulator import check_correct_pencil_transpose
+        dims = tuple(dims)
+        p = math.prod(dims)
+        if p > 48:
+            dims, p = dims[:2], math.prod(dims[:2])
+        m = data.draw(st.integers(2, 3))
+        split = split % m
+        concat = data.draw(st.sampled_from(
+            [a for a in range(m) if a != split]))
+        pencil = [data.draw(st.integers(1, 3)) for _ in range(m)]
+        pencil[split] = mult * p
+        assert check_correct_pencil_transpose(dims, tuple(pencil), split,
+                                              concat)
+
+    @given(st.permutations(list(range(3))))
+    @settings(max_examples=6, deadline=None)
+    def test_round_orders_commute(self, order):
+        from repro.core.simulator import simulate_pencil_transpose
+        want, _ = simulate_pencil_transpose((2, 3, 4), (24, 2), 0, 1)
+        out, vol = simulate_pencil_transpose((2, 3, 4), (24, 2), 0, 1,
+                                             tuple(order))
+        assert out == want
+        assert vol.total_blocks_sent == vol.theorem1_formula
+
+
 class TestPlanProperties:
     """Resolution invariants of the A2APlan registry (core.plan)."""
 

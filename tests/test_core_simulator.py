@@ -15,14 +15,17 @@ from repro.core.simulator import (
     PAPER_EXAMPLES,
     check_correct,
     check_correct_alltoallv,
+    check_correct_pencil_transpose,
     check_correct_sparse_alltoallv,
     example_index_table,
+    pencil_transpose_reference,
     round_datatype,
     simulate_direct_alltoallv,
     simulate_factorized_allgather,
     simulate_factorized_alltoall,
     simulate_factorized_alltoallv,
     simulate_factorized_reduce_scatter,
+    simulate_pencil_transpose,
     simulate_sparse_alltoallv,
     strides,
 )
@@ -349,3 +352,60 @@ class TestDimwiseGatherOracles:
         _, vol = simulate_factorized_reduce_scatter((2, 3, 4))
         assert vol.blocks_sent_per_round == [24 // 2, 12 * 2 // 3,
                                              4 * 3 // 4]
+
+
+class TestPencilTranspose:
+    """The FFT workload's re-shard oracle: the d-round pencil transpose
+    (split one array axis p ways, concatenate received chunks
+    source-major on another) on the paper's worked tori."""
+
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4)])
+    @pytest.mark.parametrize("split,concat", [(0, 1), (1, 0)])
+    def test_reshard_roundtrip_and_volume(self, dims, split, concat):
+        # check_correct_pencil_transpose asserts all three invariants:
+        # exact re-shard per rank, round-trip identity, Theorem 1 volume.
+        p = math.prod(dims)
+        pencil = [3, 3]
+        pencil[split] = 2 * p
+        assert check_correct_pencil_transpose(dims, tuple(pencil), split,
+                                              concat)
+
+    @pytest.mark.parametrize("dims", [(5, 4), (2, 3, 4)])
+    def test_rank3_pencils(self, dims):
+        p = math.prod(dims)
+        assert check_correct_pencil_transpose(dims, (2, p, 3), 1, 2)
+        assert check_correct_pencil_transpose(dims, (3, 2, p), 2, 0)
+
+    def test_round_orders_commute(self):
+        import itertools
+        dims = (2, 3, 4)
+        p = math.prod(dims)
+        want, _ = simulate_pencil_transpose(dims, (p, 4), 0, 1)
+        for order in itertools.permutations(range(len(dims))):
+            out, vol = simulate_pencil_transpose(dims, (p, 4), 0, 1, order)
+            assert out == want, order
+            assert vol.total_blocks_sent == vol.theorem1_formula
+
+    def test_theorem1_per_round(self):
+        dims = (2, 3, 4)
+        p = math.prod(dims)
+        _, vol = simulate_pencil_transpose(dims, (p, 2), 0, 1)
+        for k, Dk in enumerate(dims):
+            assert vol.blocks_sent_per_round[k] == (Dk - 1) * (p // Dk)
+
+    def test_reference_is_the_global_reshard(self):
+        # rank r's output = split-chunk r of every source's pencil, i.e.
+        # the same global array re-sharded along the split axis.
+        dims = (5, 4)
+        p = 20
+        out, _ = simulate_pencil_transpose(dims, (p, 3), 0, 1)
+        for r in range(p):
+            assert out[r] == pencil_transpose_reference(p, (p, 3), 0, 1, r)
+
+    def test_indivisible_split_axis_raises(self):
+        with pytest.raises(ValueError):
+            simulate_pencil_transpose((2, 3), (5, 4), 0, 1)
+
+    def test_same_axis_raises(self):
+        with pytest.raises(ValueError):
+            simulate_pencil_transpose((2, 3), (6, 4), 1, 1)
